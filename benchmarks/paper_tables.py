@@ -1,0 +1,159 @@
+"""One benchmark per paper table/figure (JETCAS 2022).
+
+Each function returns rows (name, us_per_call, derived).  The heavyweight
+Table II (trained-detector mAP ablation) lives in examples/train_detector.py
+— here a bit-error proxy on representative group-conv layers keeps the
+benchmark suite minutes-fast while preserving the paper's orderings.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (DEFAULT_MACRO, MacroSpec, NonidealConfig,
+                        nonlinearity_ratio, sa_required_diff,
+                        ternary_quantize, binary_quantize, ternary_planes,
+                        binary_planes, crossbar_forward, ideal_ternary_matmul,
+                        calibrate_bias, layer_current_stats, wl_point)
+
+Row = Tuple[str, float, str]
+
+
+def _timeit(fn, n=3) -> float:
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _layer(seed=0, fan_in=540, n_out=60, batch=256, density=0.5,
+           scheme="ternary", bias_rows=32):
+    w_lat = jax.random.normal(jax.random.PRNGKey(seed), (fan_in, n_out))
+    if scheme == "ternary":
+        w = ternary_quantize(w_lat)
+        mapped = ternary_planes(w, bias_rows=bias_rows)
+    else:
+        w = binary_quantize(w_lat)
+        mapped = binary_planes(w)
+    x = (jax.random.uniform(jax.random.PRNGKey(seed + 1),
+                            (batch, fan_in)) > 1 - density).astype(jnp.float32)
+    return w, mapped, x
+
+
+def fig7_nonlinearity() -> List[Row]:
+    p = jnp.arange(0, 321, dtype=jnp.float32)
+    us = _timeit(lambda: nonlinearity_ratio(p))
+    r = nonlinearity_ratio(p)
+    return [("fig7_nonlinearity_ratio", us,
+             f"ratio(p=3)={float(r[3]):.2f};ratio(p=205)={float(r[205]):.3f}")]
+
+
+def fig9_sa_variation() -> List[Row]:
+    p = jnp.arange(0, 321, dtype=jnp.float32)
+    us = _timeit(lambda: sa_required_diff(p))
+    g = sa_required_diff(p)
+    return [("fig9_sa_required_diff", us,
+             f"g(0)={float(g[0]):.1f};g(300)={float(g[300]):.1f}units")]
+
+
+def fig14_wl_voltage() -> List[Row]:
+    """WL voltage <-> power <-> accuracy trade-off (power model + bit
+    agreement analog of the paper's mAP curve)."""
+    rows: List[Row] = []
+    w, _, x = _layer()
+    ref = ideal_ternary_matmul(x, w) > 0
+    for v in (0.40, 0.42, 0.44, 0.46, 0.48):
+        spec = MacroSpec(wl_voltage=v)
+        mapped = ternary_planes(w, bias_rows=32)
+        def run(spec=spec, mapped=mapped):
+            return crossbar_forward(jax.random.PRNGKey(2), x, mapped,
+                                    cfg=NonidealConfig(device_variation=True),
+                                    spec=spec)
+        us = _timeit(run, n=1)
+        agree = float(jnp.mean((run() > 0.5) == ref))
+        i_ua, sigma = wl_point(v)
+        energy = spec.read_energy_pj(activated_lrs=0.2 * 1024 * 0.5)
+        rows.append((f"fig14_wl_{v:.2f}V", us,
+                     f"sigma={sigma:.3f};E={energy:.2f}pJ;agree={agree:.3f}"))
+    return rows
+
+
+def table1_sensing() -> List[Row]:
+    """Sensing failures w/o vs w/ calibrated extra bias, for a dense and a
+    sparse layer (the paper's per-layer Table I structure)."""
+    rows: List[Row] = []
+    for name, density in (("dense_layer", 0.5), ("sparse_layer", 0.25)):
+        w, mapped0, x = _layer(density=density, bias_rows=0)
+        t0 = time.perf_counter()
+        ip, ineg, p = layer_current_stats(jax.random.PRNGKey(3), x, mapped0)
+        best, report = calibrate_bias(ip, ineg, p)
+        us = (time.perf_counter() - t0) * 1e6
+        r0, rb = report[0], report[best]
+        rows.append((f"table1_{name}", us,
+                     f"bias={best};below_lb:{r0['below_lower_bound']:.3f}"
+                     f"->{rb['below_lower_bound']:.3f};"
+                     f"sa_var:{r0['sensing_variation']:.3f}"
+                     f"->{rb['sensing_variation']:.3f}"))
+    return rows
+
+
+_ABLATION = [
+    ("ideal", NonidealConfig.none()),
+    ("devvar", NonidealConfig(device_variation=True)),
+    ("devvar+nl", NonidealConfig(device_variation=True, nonlinearity=True)),
+    ("devvar+nl+peri", NonidealConfig(device_variation=True,
+                                      nonlinearity=True, sa_variation=True,
+                                      sensing_range=True)),
+    ("all", NonidealConfig.all()),
+]
+
+
+def table2_ablation_proxy() -> List[Row]:
+    """Bit-agreement ablation, proposed vs baseline design (Table II
+    ordering; full mAP version: examples/train_detector.py)."""
+    rows: List[Row] = []
+    for design, scheme, acc, bias in (("proposed", "ternary", "single_shot", 32),
+                                      ("baseline", "binary", "partial_sum", 0)):
+        w, mapped, x = _layer(scheme=scheme, bias_rows=bias)
+        ref = ideal_ternary_matmul(x, w) > 0
+        vals = []
+        for name, cfg in _ABLATION:
+            out = crossbar_forward(jax.random.PRNGKey(4), x, mapped, cfg=cfg,
+                                   accumulation=acc, partial_rows=212)
+            vals.append(f"{name}={float(jnp.mean((out > 0.5) == ref)):.3f}")
+        us = _timeit(lambda: crossbar_forward(
+            jax.random.PRNGKey(4), x, mapped, cfg=NonidealConfig.all(),
+            accumulation=acc, partial_rows=212), n=1)
+        rows.append((f"table2_{design}", us, ";".join(vals)))
+    return rows
+
+
+def table4_tolerance() -> List[Row]:
+    """Tolerance limits: device sigma sweep + SA variation margin sweep."""
+    import dataclasses
+    rows: List[Row] = []
+    w, _, x = _layer()
+    ref = ideal_ternary_matmul(x, w) > 0
+    mapped = ternary_planes(w, bias_rows=32)
+    for sigma in (0.42, 0.43, 0.44, 0.47, 0.52):
+        spec = dataclasses.replace(MacroSpec(), sigma_override=sigma)
+        out = crossbar_forward(jax.random.PRNGKey(5), x, mapped,
+                               cfg=NonidealConfig(device_variation=True),
+                               spec=spec)
+        agree = float(jnp.mean((out > 0.5) == ref))
+        rows.append((f"table4_devstd_{sigma:.2f}", 0.0, f"agree={agree:.3f}"))
+    for extra in (0.0, 1.0, 2.0, 3.0):
+        out = crossbar_forward(jax.random.PRNGKey(7), x, mapped,
+                               cfg=NonidealConfig(sa_variation=True),
+                               sa_extra_units=extra)
+        agree = float(jnp.mean((out > 0.5) == ref))
+        rows.append((f"table4_sa_plus{int(extra)}", 0.0, f"agree={agree:.3f}"))
+    return rows
+
+
+ALL = [fig7_nonlinearity, fig9_sa_variation, fig14_wl_voltage,
+       table1_sensing, table2_ablation_proxy, table4_tolerance]

@@ -1,0 +1,140 @@
+"""End-to-end driver (the paper's task): train the IRC object detector with
+QAT on synthetic IVS-geometry data, then evaluate the full structural
+crossbar simulation under the paper's nonideal-effect ablation (Table II)
+for BOTH designs:
+
+  proposed : ternary 20/60/20, no BN, single-shot, extra bias
+  baseline : binary + shared reference, in-memory BN, partial sums
+
+Defaults are CPU-sized (32x32 images, ~200 steps, a few minutes); pass
+--full for the paper's 1024x576 geometry (cluster-scale).
+
+  PYTHONPATH=src python examples/train_detector.py --steps 200
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import yolo_irc
+from repro.core import NonidealConfig
+from repro.data.detection import SyntheticDetectionData
+from repro.models import IRCDetector
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_step_decay
+from repro.train.det_loss import yolo_loss, evaluate_map
+
+ABLATION = [
+    ("ideal", NonidealConfig.none()),
+    ("dev-var", NonidealConfig(device_variation=True)),
+    ("dev+nl", NonidealConfig(device_variation=True, nonlinearity=True)),
+    ("dev+nl+sa", NonidealConfig(device_variation=True, nonlinearity=True,
+                                 sa_variation=True, sensing_range=True)),
+    ("all", NonidealConfig.all()),
+]
+
+
+def train(det, data, steps, batch, lr, seed=0, noise_cfg=NonidealConfig.none()):
+    params = det.init(jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(weight_decay=1e-3)   # paper: AdamW, wd=1e-3
+
+    @jax.jit
+    def step_fn(params, opt, images, targets, key, lr):
+        def loss_fn(p):
+            pred = det.apply(p, images, mode="train", key=key,
+                             cfg_ni=noise_cfg)
+            return yolo_loss(pred, targets, det.cfg.n_anchors,
+                             det.cfg.n_classes)
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt, _ = adamw_update(grads, opt, params, lr, ocfg)
+        return params, opt, loss
+
+    t0 = time.time()
+    for s in range(steps):
+        b = data.batch_for_step(s, batch)
+        lr_s = warmup_step_decay(s, base_lr=lr, warmup_steps=max(steps // 10, 1),
+                                 decay_points=((int(steps * 0.7), lr / 10),
+                                               (int(steps * 0.9), lr / 100)))
+        params, opt, loss = step_fn(params, opt, b.images, b.targets,
+                                    jax.random.fold_in(jax.random.PRNGKey(1), s),
+                                    lr_s)
+        if s % max(steps // 10, 1) == 0:
+            print(f"  step {s:4d}  loss {float(loss):8.4f} "
+                  f"({time.time()-t0:5.1f}s)", flush=True)
+    return params
+
+
+def eval_map(det, params, data, n_batches, batch, cfg_ni, seeds, mode="eval"):
+    """mAP over `seeds` nonideal-sample draws (paper: 10 seeds)."""
+    maps = []
+    for seed in range(seeds):
+        preds, gt_b, gt_c = [], [], []
+        for i in range(n_batches):
+            b = data.batch_for_step(1000 + i, batch)
+            pred = det.apply(params, b.images, mode=mode,
+                             key=jax.random.PRNGKey(7000 + seed),
+                             cfg_ni=cfg_ni)
+            preds.extend(np.asarray(pred))
+            gt_b.extend(b.boxes)
+            gt_c.extend(b.classes)
+        maps.append(evaluate_map(np.asarray(preds), gt_b, gt_c,
+                                 det.cfg.n_anchors, det.cfg.n_classes) * 100)
+    return float(np.mean(maps)), float(np.std(maps))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--eval-batches", type=int, default=4)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale 1024x576 geometry")
+    ap.add_argument("--designs", default="proposed,baseline")
+    args = ap.parse_args()
+
+    results = {}
+    for design in args.designs.split(","):
+        cfg = (yolo_irc.proposed() if design == "proposed"
+               else yolo_irc.baseline()) if args.full else \
+            yolo_irc.smoke("ternary" if design == "proposed" else "binary")
+        det = IRCDetector(cfg)
+        data = SyntheticDetectionData(img_hw=cfg.img_hw,
+                                      stride=2 ** (len(cfg.stage_channels) + 1),
+                                      n_classes=cfg.n_classes,
+                                      n_anchors=cfg.n_anchors)
+        print(f"\n=== {design} design: QAT ({args.steps} steps) ===")
+        params = train(det, data, args.steps, args.batch, args.lr)
+        if cfg.use_bn:
+            # deployment step: populate BN running stats from a calibration
+            # batch so the in-memory BN fold reflects trained activations
+            calib = data.batch_for_step(999, args.batch * 4)
+            params = det.calibrate_bn(params, calib.images)
+
+        print(f"=== {design}: structural-sim ablation "
+              f"({args.seeds} nonideal seeds) ===")
+        results[design] = {}
+        for name, cfg_ni in ABLATION:
+            m, s = eval_map(det, params, data, args.eval_batches, args.batch,
+                            cfg_ni, seeds=1 if name == "ideal" else args.seeds)
+            results[design][name] = (m, s)
+            print(f"  {name:10s} mAP {m:5.1f} ± {s:4.1f}")
+
+    print("\n=== Table II (synthetic-data analog) ===")
+    header = "design     " + "".join(f"{n:>12s}" for n, _ in ABLATION)
+    print(header)
+    for design, r in results.items():
+        row = f"{design:10s}" + "".join(f"{r[n][0]:12.1f}" for n, _ in ABLATION)
+        print(row)
+    if {"proposed", "baseline"} <= results.keys():
+        drop_p = results["proposed"]["ideal"][0] - results["proposed"]["all"][0]
+        drop_b = results["baseline"]["ideal"][0] - results["baseline"]["all"][0]
+        print(f"\nmAP drop under all effects: proposed {drop_p:.1f}, "
+              f"baseline {drop_b:.1f} (paper: 3.85 vs catastrophic)")
+
+
+if __name__ == "__main__":
+    main()

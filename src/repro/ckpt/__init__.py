@@ -1,0 +1,2 @@
+from repro.ckpt.checkpoint import (CheckpointManager, save_pytree,
+                                   restore_pytree, latest_step)

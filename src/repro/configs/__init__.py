@@ -1,0 +1,5 @@
+"""repro.configs — assigned architectures (+ the paper's own model).
+
+``registry.get_config(arch_id, variant)`` resolves ``--arch`` flags;
+``shapes.SHAPES`` holds the assigned input shapes.
+"""

@@ -1,0 +1,31 @@
+"""Architecture registry: ``--arch <id>`` resolution for launch tools."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.models.lm_config import LMConfig
+from repro.configs import (hymba_1p5b, phi3_medium_14b, deepseek_67b,
+                           gemma2_27b, llama3_405b, qwen3_moe_235b,
+                           kimi_k2_1t, musicgen_medium, rwkv6_3b,
+                           chameleon_34b)
+
+_MODULES = {
+    m.ARCH_ID: m for m in (
+        hymba_1p5b, phi3_medium_14b, deepseek_67b, gemma2_27b, llama3_405b,
+        qwen3_moe_235b, kimi_k2_1t, musicgen_medium, rwkv6_3b, chameleon_34b)
+}
+
+
+def list_archs() -> List[str]:
+    return sorted(_MODULES)
+
+
+def get_config(arch: str, variant: str = "full") -> LMConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
+    mod = _MODULES[arch]
+    if variant == "full":
+        return mod.full()
+    if variant == "smoke":
+        return mod.smoke()
+    raise ValueError(f"unknown variant {variant!r}")

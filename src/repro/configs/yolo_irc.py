@@ -1,0 +1,40 @@
+"""The paper's own model: YOLOv2-style IRC object detector (Fig. 11).
+
+Six binary group-conv layers (the paper's Table I names them Layer2_0,
+Layer2_1, Layer3_0..Layer3_3), group size 60, digital stem + head, evaluated
+on 1024x576 inputs (IVS 3cls geometry; dataset is synthetic here — see
+DESIGN.md).  `proposed()` and `baseline()` mirror the Table II designs.
+"""
+from repro.models.detector import DetectorConfig
+
+ARCH_ID = "yolo-irc"
+
+
+def proposed() -> DetectorConfig:
+    """Ternary 20/60/20, no BN, single-shot accumulation, 32 bias rows."""
+    return DetectorConfig(
+        img_hw=(576, 1024), n_classes=3, n_anchors=5, group=60,
+        stage_channels=(60, 120, 240), blocks_per_stage=(2, 2, 2),
+        scheme="ternary", use_bn=False, accumulation="single_shot",
+        bias_rows=32)
+
+
+def baseline() -> DetectorConfig:
+    """Binary weights vs shared reference, in-memory BN (96 rows),
+    partial-sum accumulation (~300 uA per 212-row chunk at nominal WL)."""
+    return DetectorConfig(
+        img_hw=(576, 1024), n_classes=3, n_anchors=5, group=60,
+        stage_channels=(60, 120, 240), blocks_per_stage=(2, 2, 2),
+        scheme="binary", use_bn=True, accumulation="partial_sum",
+        bias_rows=0, partial_rows=212)
+
+
+def smoke(scheme: str = "ternary") -> DetectorConfig:
+    kwargs = dict(img_hw=(32, 32), stage_channels=(60, 120),
+                  blocks_per_stage=(1, 1), n_classes=3, n_anchors=2)
+    if scheme == "ternary":
+        return DetectorConfig(scheme="ternary", use_bn=False,
+                              accumulation="single_shot", bias_rows=16,
+                              **kwargs)
+    return DetectorConfig(scheme="binary", use_bn=True,
+                          accumulation="partial_sum", bias_rows=0, **kwargs)

@@ -1,0 +1,26 @@
+"""repro.core — the paper's contribution: hardware-robust in-RRAM computing.
+
+Public surface:
+  MacroSpec / DEFAULT_MACRO      physical macro description + power model
+  NonidealConfig                 Table-II effect toggles
+  crossbar_forward               full structural crossbar simulation
+  IRCLinear / IRCLinearConfig    trainable IRC layer (QAT + structural eval)
+  ternary_quantize / binary_quantize / binary_activation   STE quantizers
+  ternary_planes / binary_planes crossbar mapping schemes
+  calibrate_bias                 layerwise extra-bias calibration (Table I)
+"""
+from repro.core.macro import MacroSpec, DEFAULT_MACRO, wl_point, WL_OPERATING_POINTS
+from repro.core.nonideal import (NonidealConfig, sample_variation_mask,
+                                 nonlinearity_ratio, apply_nonlinearity,
+                                 ir_drop_factors, apply_ir_drop,
+                                 sa_required_diff, sa_offset, sensing_failure,
+                                 resolve_sa)
+from repro.core.ternary import (ternary_quantize, binary_quantize,
+                                binary_activation, soft_sa_output,
+                                ternary_fractions, distribution_regularizer)
+from repro.core.mapping import (MappedLayer, ternary_planes, binary_planes,
+                                extend_inputs, tile_rows, fold_bn_to_bias_units)
+from repro.core.crossbar import (crossbar_forward, irc_linear_train,
+                                 IRCLinear, IRCLinearConfig,
+                                 ideal_ternary_matmul, variation_noise_std)
+from repro.core.calibration import calibrate_bias, sa_error_rates, layer_current_stats

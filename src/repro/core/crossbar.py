@@ -1,0 +1,297 @@
+"""Crossbar forward simulation + IRC layer modules (the paper's core).
+
+Two execution paths, mirroring the paper's methodology:
+
+  * `crossbar_forward` — the full structural simulation used at INFERENCE /
+    evaluation time: conductance planes, per-cell device variation, 32-cell
+    IR-drop blocks, accumulation nonlinearity (single-shot vs partial-sum),
+    SA offset + limited sensing range.  This is the function the Pallas
+    kernel (`repro.kernels.irc_mvm`) accelerates.
+  * `irc_linear_train` — the differentiable surrogate used for QAT /
+    "retraining": ideal ternary matmul + reparametrized noise matching the
+    first-order statistics of the structural sim, with STE quantizers.
+
+Accumulation modes (Sec. III-C / IV-B.3):
+  * "single_shot": the whole column accumulates analog in one operation
+    (proposed; enabled by the lowered word-line voltage).  The monotone
+    nonlinearity then cancels in the differential comparison.
+  * "partial_sum": the column is split into `partial_rows`-row chunks whose
+    currents are accumulated externally (baseline; forced by the 300 uA
+    bit-line limit at nominal word-line voltage).  Each chunk sees its own
+    nonlinearity, which does NOT cancel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.macro import MacroSpec, DEFAULT_MACRO
+from repro.core import nonideal as ni
+from repro.core.mapping import MappedLayer, extend_inputs
+from repro.core.ternary import (ternary_quantize, binary_quantize,
+                                binary_activation, soft_sa_output)
+
+
+# ------------------------------------------------------------------ structural sim
+
+def _block_reduce(x_ext: jax.Array, plane: jax.Array, block: int
+                  ) -> jax.Array:
+    """Per-IR-block partial currents: x_ext [..., R], plane [R, N]
+    -> [..., nb, N] with nb = ceil(R / block)."""
+    rows, n_out = plane.shape
+    nb = -(-rows // block)
+    pad = nb * block - rows
+    if pad:
+        x_ext = jnp.pad(x_ext, [(0, 0)] * (x_ext.ndim - 1) + [(0, pad)])
+        plane = jnp.pad(plane, ((0, pad), (0, 0)))
+    xb = x_ext.reshape(x_ext.shape[:-1] + (nb, block))
+    pb = plane.reshape(nb, block, n_out)
+    return jnp.einsum("...bk,bkn->...bn", xb, pb)
+
+
+def _accumulate(blocks: jax.Array, counts: jax.Array, cfg: ni.NonidealConfig,
+                spec: MacroSpec, accumulation: str, partial_rows: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Apply IR drop + nonlinearity to per-block currents.
+
+    blocks/counts: [..., nb, N] (currents with variation / ideal LRS counts).
+    Returns (bit-line current [..., N], activated LRS count [..., N]).
+    """
+    if cfg.ir_drop:
+        factors = ni.ir_drop_factors(
+            jnp.moveaxis(blocks, -2, -1), spec.ir_alpha)      # [..., N, nb]
+        blocks = blocks * jnp.moveaxis(factors, -1, -2)
+    p_total = jnp.sum(counts, axis=-2)
+    if accumulation == "single_shot":
+        i_line = jnp.sum(blocks, axis=-2)
+        if cfg.nonlinearity:
+            i_line = ni.apply_nonlinearity(i_line, p_total)
+    elif accumulation == "partial_sum":
+        nb = blocks.shape[-2]
+        chunk = max(1, partial_rows // spec.ir_block)
+        n_chunks = -(-nb // chunk)
+        pad = n_chunks * chunk - nb
+        if pad:
+            zeros = [(0, 0)] * blocks.ndim
+            zeros[-2] = (0, pad)
+            blocks = jnp.pad(blocks, zeros)
+            counts = jnp.pad(counts, zeros)
+        cshape = blocks.shape[:-2] + (n_chunks, chunk, blocks.shape[-1])
+        i_chunk = jnp.sum(blocks.reshape(cshape), axis=-2)
+        p_chunk = jnp.sum(counts.reshape(cshape), axis=-2)
+        if cfg.nonlinearity:
+            i_chunk = ni.apply_nonlinearity(i_chunk, p_chunk)
+        i_line = jnp.sum(i_chunk, axis=-2)
+    else:
+        raise ValueError(f"unknown accumulation mode: {accumulation}")
+    return i_line, p_total
+
+
+def crossbar_forward(key: jax.Array, x_bits: jax.Array, mapped: MappedLayer,
+                     *, cfg: ni.NonidealConfig = ni.NonidealConfig.none(),
+                     spec: MacroSpec = DEFAULT_MACRO,
+                     accumulation: str = "single_shot",
+                     partial_rows: int = 256,
+                     sa_extra_units: float = 0.0,
+                     output: str = "binary") -> jax.Array:
+    """Full structural crossbar simulation.
+
+    x_bits: [..., fan_in] in {0,1}; returns [..., n_out]:
+      output="binary": SA decisions in {0,1}
+      output="diff":   analog current difference (for calibration / heads)
+
+    Layers wider than the macro are tiled over multiple macros by the caller
+    (see `IRCLinear`): this function simulates ONE macro's rows and asserts
+    the planes fit.
+    """
+    assert mapped.rows <= spec.rows, (
+        f"planes ({mapped.rows} rows) exceed the macro ({spec.rows}); tile first")
+    k_var_p, k_var_n, k_sa = jax.random.split(key, 3)
+    x_ext = extend_inputs(x_bits.astype(jnp.float32), mapped)
+    gp, gn = mapped.g_pos, mapped.g_neg
+
+    ep, en = gp, gn
+    if cfg.device_variation:
+        sig = spec.sigma_lrs
+        ep = gp * ni.sample_variation_mask(k_var_p, gp.shape, sig)
+        if mapped.scheme == "binary":
+            # ONE shared physical reference line: its per-cell variation is
+            # common to every output channel (input-dependent common offset,
+            # Sec. IV-B.1)
+            en = gn * ni.sample_variation_mask(k_var_n, (gn.shape[0], 1), sig)
+        else:
+            en = gn * ni.sample_variation_mask(k_var_n, gn.shape, sig)
+    if spec.hrs_leak:
+        ep = ep + (1.0 - gp) * spec.hrs_leak
+        en = en + (1.0 - gn) * spec.hrs_leak
+
+    blk = spec.ir_block
+    i_pos, p_pos = _accumulate(_block_reduce(x_ext, ep, blk),
+                               _block_reduce(x_ext, gp, blk),
+                               cfg, spec, accumulation, partial_rows)
+    i_neg, p_neg = _accumulate(_block_reduce(x_ext, en, blk),
+                               _block_reduce(x_ext, gn, blk),
+                               cfg, spec, accumulation, partial_rows)
+
+    if output == "diff":
+        return i_pos - i_neg
+    p_pair = p_pos + p_neg
+    return ni.resolve_sa(k_sa, i_pos, i_neg, p_pair, cfg, spec, sa_extra_units)
+
+
+# ------------------------------------------------------------------ QAT surrogate
+
+def variation_noise_std(p: jax.Array, sigma: float) -> jax.Array:
+    """First-order std of a p-cell accumulated current under per-cell
+    log-normal variation: sqrt(p) * std(lognormal(0, sigma))."""
+    s2 = sigma * sigma
+    cell_var = (jnp.exp(s2) - 1.0) * jnp.exp(s2)
+    return jnp.sqrt(jnp.maximum(p, 0.0) * cell_var)
+
+
+def irc_linear_train(key: jax.Array, x: jax.Array, w_latent: jax.Array, *,
+                     cfg: ni.NonidealConfig = ni.NonidealConfig.none(),
+                     spec: MacroSpec = DEFAULT_MACRO,
+                     scheme: str = "ternary",
+                     binarize_input: bool = True,
+                     sa_beta: float = 4.0,
+                     output: str = "binary") -> jax.Array:
+    """Differentiable QAT path: quantized matmul + reparametrized noise.
+
+    Matches the structural sim to first order: the current-difference noise
+    from device variation has std sqrt(p_pair)*std_cell and the SA offset has
+    std 0.5*g(p_pair); both are added to the pre-activation with fresh
+    samples per step (variation-aware training, paper Sec. V / ref [5]).
+    """
+    if binarize_input:
+        x = binary_activation(x)
+    if scheme == "ternary":
+        w_q = ternary_quantize(w_latent)
+    elif scheme == "binary":
+        w_q = binary_quantize(w_latent)
+    else:
+        raise ValueError(scheme)
+    pre = x @ w_q
+    if cfg.any():
+        k1, k2 = jax.random.split(key)
+        # expected activated-LRS count on the differential pair
+        lrs_frac = jnp.mean(jnp.abs(jax.lax.stop_gradient(w_q)))
+        p_pair = jnp.sum(jax.lax.stop_gradient(x), axis=-1, keepdims=True) * lrs_frac
+        std = 0.0
+        if cfg.device_variation:
+            std = std + variation_noise_std(p_pair, spec.sigma_lrs)
+        if cfg.sa_variation:
+            std = std + 0.5 * ni.sa_required_diff(p_pair, spec)
+        if cfg.device_variation or cfg.sa_variation:
+            pre = pre + std * jax.random.normal(k1, pre.shape, pre.dtype)
+    if output == "diff":
+        return pre
+    return soft_sa_output(pre, beta=sa_beta)
+
+
+# ------------------------------------------------------------------ layer module
+
+@dataclasses.dataclass(frozen=True)
+class IRCLinearConfig:
+    fan_in: int
+    fan_out: int
+    scheme: str = "ternary"             # "ternary" (proposed) | "binary" (baseline)
+    bias_rows: int = 0                  # extra common-mode bias rows (<= 32)
+    accumulation: str = "single_shot"   # "single_shot" | "partial_sum"
+    partial_rows: int = 256
+    use_bn: bool = False                # baseline in-memory BN (Fig. 13a)
+    output: str = "binary"              # "binary" | "diff"
+
+
+class IRCLinear:
+    """A linear layer executable ideally, via QAT surrogate, or through the
+    full crossbar simulation; fan-in wider than one macro is tiled over
+    multiple macros whose analog differences combine digitally (per-tile
+    nonideal effects still apply)."""
+
+    def __init__(self, config: IRCLinearConfig, spec: MacroSpec = DEFAULT_MACRO):
+        self.config = config
+        self.spec = spec
+
+    def init(self, key: jax.Array) -> dict:
+        c = self.config
+        k_w, k_bn = jax.random.split(key)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(c.fan_in, jnp.float32))
+        params = {"w": jax.random.normal(k_w, (c.fan_in, c.fan_out),
+                                         jnp.float32) * scale}
+        if c.use_bn:
+            params["bn"] = {
+                "gamma": jnp.ones((c.fan_out,), jnp.float32),
+                "beta": jnp.zeros((c.fan_out,), jnp.float32),
+                "mean": jnp.zeros((c.fan_out,), jnp.float32),
+                "var": jnp.ones((c.fan_out,), jnp.float32),
+            }
+        return params
+
+    def quantized_weights(self, params: dict) -> jax.Array:
+        if self.config.scheme == "ternary":
+            return ternary_quantize(params["w"])
+        return binary_quantize(params["w"])
+
+    def map_to_planes(self, params: dict):
+        """Build per-tile MappedLayers (static per deployment)."""
+        from repro.core import mapping as mp
+        c, spec = self.config, self.spec
+        w_q = jax.lax.stop_gradient(self.quantized_weights(params))
+        if c.scheme == "ternary":
+            full = mp.ternary_planes(w_q, bias_rows=c.bias_rows)
+        else:
+            bn_units = None
+            if c.use_bn:
+                bn = params["bn"]
+                bn_units = mp.fold_bn_to_bias_units(bn["gamma"], bn["beta"],
+                                                    bn["mean"], bn["var"])
+            full = mp.binary_planes(w_q, bn_bias_units=bn_units, spec=spec)
+        lead = full.rows - full.fan_in   # always-on bias / BN rows (tile 0 only)
+        tiles = []
+        for lo in range(0, full.rows, spec.rows):
+            hi = min(lo + spec.rows, full.rows)
+            tile_lead = max(0, lead - lo) if lo < lead else 0
+            tiles.append(MappedLayer(
+                g_pos=full.g_pos[lo:hi], g_neg=full.g_neg[lo:hi],
+                bias_rows=tile_lead, scheme=full.scheme,
+                fan_in=(hi - lo) - tile_lead))
+        return tiles
+
+    def apply(self, params: dict, x: jax.Array, *, key: jax.Array,
+              mode: str = "train",
+              cfg: ni.NonidealConfig = ni.NonidealConfig.none(),
+              sa_extra_units: float = 0.0) -> jax.Array:
+        c, spec = self.config, self.spec
+        if mode == "train":
+            return irc_linear_train(key, x, params["w"], cfg=cfg, spec=spec,
+                                    scheme=c.scheme, output=c.output)
+        # evaluation: full structural sim, tiled over macros
+        x_bits = jnp.where(x > 0, 1.0, 0.0).astype(jnp.float32)
+        tiles = self.map_to_planes(params)
+        diffs = []
+        offset = 0
+        for t, tile in enumerate(tiles):
+            k_t = jax.random.fold_in(key, t)
+            lead = tile.rows - tile.fan_in
+            x_t = x_bits[..., offset:offset + tile.rows - lead]
+            offset += tile.rows - lead
+            diffs.append(crossbar_forward(
+                k_t, x_t, tile, cfg=cfg, spec=spec,
+                accumulation=c.accumulation, partial_rows=c.partial_rows,
+                sa_extra_units=sa_extra_units,
+                output="diff" if (len(tiles) > 1 or c.output == "diff") else "binary"))
+        if len(tiles) == 1:
+            return diffs[0]
+        total = sum(diffs)
+        if c.output == "diff":
+            return total
+        return (total > 0).astype(jnp.float32)
+
+
+def ideal_ternary_matmul(x_bits: jax.Array, w_t: jax.Array) -> jax.Array:
+    """Ideal digital reference: {0,1} inputs x ternary weights."""
+    return x_bits.astype(jnp.float32) @ w_t.astype(jnp.float32)

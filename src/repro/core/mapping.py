@@ -1,0 +1,147 @@
+"""Weight -> crossbar conductance-plane mapping (paper Sec. IV-B, Figs. 12-13).
+
+Two mapping schemes:
+
+  * `ternary_planes`  (proposed): each weight column maps to a differential
+    (G+, G-) bit-line pair; +1 -> (LRS, HRS), -1 -> (HRS, LRS), 0 -> (HRS, HRS).
+  * `binary_planes`   (baseline): weights in {-1,+1} map to a single
+    convolution bit-line (LRS for +1, HRS for -1) compared against a shared
+    reference bit-line with alternating LRS/HRS (expected current = p/2).
+
+Row-order matters because of IR drop: block 0 is closest to the bit-line
+driver.  The proposed design places the (<=32) extra bias rows nearest the
+driver (Fig. 13b); the baseline burns 96 near-driver rows on in-memory BN
+(Fig. 13a).  Layers wider than the macro are tiled over multiple macros.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.macro import MacroSpec, DEFAULT_MACRO
+
+
+@dataclasses.dataclass
+class MappedLayer:
+    """A linear layer mapped onto crossbar conductance planes.
+
+    g_pos/g_neg: [rows_mapped, n_out] float {0,1} conductance planes, row 0
+    nearest the driver.  `bias_rows` leading rows are always-on common-mode
+    bias (LRS on BOTH planes) — they raise min(I+, I-) above the SA's lower
+    sensing bound without changing the differential (Sec. IV-B.4).
+    `bn_pos/bn_neg` leading rows (baseline only) encode the in-memory BN bias
+    on one plane.
+    """
+    g_pos: jax.Array
+    g_neg: jax.Array
+    bias_rows: int
+    scheme: str                    # "ternary" | "binary"
+    fan_in: int
+
+    @property
+    def rows(self) -> int:
+        return self.g_pos.shape[0]
+
+    @property
+    def n_out(self) -> int:
+        return self.g_pos.shape[1]
+
+
+def ternary_planes(w_t: jax.Array, bias_rows: int = 0) -> MappedLayer:
+    """Map ternary weights [fan_in, n_out] to differential planes.
+
+    Returns planes of shape [bias_rows + fan_in, n_out]; bias rows first
+    (nearest driver, Fig. 13b), then the weight rows.
+    """
+    w_t = w_t.astype(jnp.float32)
+    g_pos = (w_t > 0.5).astype(jnp.float32)
+    g_neg = (w_t < -0.5).astype(jnp.float32)
+    if bias_rows:
+        ones = jnp.ones((bias_rows, w_t.shape[1]), jnp.float32)
+        g_pos = jnp.concatenate([ones, g_pos], axis=0)
+        g_neg = jnp.concatenate([ones, g_neg], axis=0)
+    return MappedLayer(g_pos=g_pos, g_neg=g_neg, bias_rows=bias_rows,
+                       scheme="ternary", fan_in=w_t.shape[0])
+
+
+def binary_planes(w_b: jax.Array, bn_bias_units: Optional[jax.Array] = None,
+                  spec: MacroSpec = DEFAULT_MACRO) -> MappedLayer:
+    """Baseline mapping: binary weights vs a shared reference bit-line.
+
+    `g_pos` is the convolution bit-line (LRS for +1), `g_neg` the SHARED
+    reference bit-line: evenly distributed half conductance so that ideally
+    I_ref = p/2 for p activated rows and sign(I_conv - I_ref) = sign(x.w).
+    Because ONE physical reference line serves the whole array (Fig. 12a),
+    its variation / IR-drop error is a COMMON, input-dependent offset on
+    every output channel — exactly the fragility the paper's Sec. IV-B.1
+    calls out (the structural sim shares one variation column for it).
+    If `bn_bias_units` [n_out] is given (integer units in [-bn_rows,
+    bn_rows]), the in-memory BN mapping of Fig. 13a adds `spec.bn_rows`
+    always-on leading rows: |b| of them LRS on the conv line (b>0) or on the
+    reference line (b<0).
+    """
+    w_b = w_b.astype(jnp.float32)
+    fan_in, n_out = w_b.shape
+    conv = (w_b > 0).astype(jnp.float32)
+    ref = jnp.full((fan_in, n_out), 0.5, jnp.float32)
+    bn = 0
+    if bn_bias_units is not None:
+        bn = spec.bn_rows
+        b = jnp.clip(jnp.round(bn_bias_units), -bn, bn)
+        r = jnp.arange(bn, dtype=jnp.float32)[:, None]
+        conv_bn = (r < jnp.maximum(b, 0)[None, :]).astype(jnp.float32)
+        ref_bn = (r < jnp.maximum(-b, 0)[None, :]).astype(jnp.float32)
+        conv = jnp.concatenate([conv_bn, conv], axis=0)
+        ref = jnp.concatenate([ref_bn, ref], axis=0)
+    return MappedLayer(g_pos=conv, g_neg=ref, bias_rows=bn,
+                       scheme="binary", fan_in=fan_in)
+
+
+def extend_inputs(x_bits: jax.Array, mapped: MappedLayer) -> jax.Array:
+    """Prefix the always-on rows (bias / BN) to a batch of word-line patterns.
+
+    x_bits: [..., fan_in] in {0,1}  ->  [..., rows]."""
+    lead = mapped.rows - mapped.fan_in
+    if lead == 0:
+        return x_bits
+    ones = jnp.ones(x_bits.shape[:-1] + (lead,), x_bits.dtype)
+    return jnp.concatenate([ones, x_bits], axis=-1)
+
+
+def tile_rows(mapped: MappedLayer, spec: MacroSpec = DEFAULT_MACRO
+              ) -> Tuple[jax.Array, jax.Array, int]:
+    """Split planes into macro-row tiles [n_tiles, spec.rows, n_out] (zero
+    padded).  Tiles are separate macros: each accumulates analog internally
+    and tile outputs are combined digitally (fan-in > macro rows cannot share
+    a bit-line)."""
+    rows, n_out = mapped.g_pos.shape
+    n_tiles = -(-rows // spec.rows)
+    pad = n_tiles * spec.rows - rows
+    gp = jnp.pad(mapped.g_pos, ((0, pad), (0, 0))).reshape(n_tiles, spec.rows, n_out)
+    gn = jnp.pad(mapped.g_neg, ((0, pad), (0, 0))).reshape(n_tiles, spec.rows, n_out)
+    return gp, gn, n_tiles
+
+
+def pad_inputs_for_tiles(x_ext: jax.Array, n_tiles: int,
+                         spec: MacroSpec = DEFAULT_MACRO) -> jax.Array:
+    """[..., rows] -> [..., n_tiles, spec.rows] matching `tile_rows`."""
+    rows = x_ext.shape[-1]
+    pad = n_tiles * spec.rows - rows
+    x = jnp.pad(x_ext, [(0, 0)] * (x_ext.ndim - 1) + [(0, pad)])
+    return x.reshape(x_ext.shape[:-1] + (n_tiles, spec.rows))
+
+
+def fold_bn_to_bias_units(gamma: jax.Array, beta: jax.Array, mean: jax.Array,
+                          var: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Fold BN into equivalent pre-activation bias units for in-memory BN.
+
+    For binary activation sign(BN(y)) with gamma>0:
+      sign(gamma*(y-mean)/std + beta) = sign(y + (beta*std/gamma - mean))
+    The returned units are rounded to integer LRS cells by `binary_planes`
+    (this rounding is exactly the BN-precision fragility the paper removes).
+    """
+    std = jnp.sqrt(var + eps)
+    return beta * std / jnp.maximum(gamma, 1e-6) - mean

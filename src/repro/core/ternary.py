@@ -1,0 +1,110 @@
+"""Binary/ternary quantizers with straight-through estimators (paper Sec. IV-B).
+
+The proposed design uses ternary weights (0, +/-1) with the distribution
+regulated to 20/60/20 (-1/0/+1) per filter group, and binary {0,1}
+activations (a word-line is either driven or not).  The baseline design uses
+binary +/-1 weights.  All quantizers are differentiable via STE so the same
+functions serve QAT ("retraining" in the paper) and inference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _ste(hard: jax.Array, soft: jax.Array) -> jax.Array:
+    """hard value forward, soft gradient backward."""
+    return soft + jax.lax.stop_gradient(hard - soft)
+
+
+# ------------------------------------------------------------------ weights
+
+def _sorted_threshold(w: jax.Array, frac: float, axis) -> jax.Array:
+    """frac-quantile via sort + static index (jnp.quantile's gather lowering
+    is broken under trace in this jaxlib build). Thresholds carry no
+    gradient (they are distribution statistics, constants under STE) —
+    stop_gradient BEFORE the sort also keeps this jaxlib's broken sort-JVP
+    gather lowering out of the trace."""
+    w = jax.lax.stop_gradient(w)
+    if axis is None:
+        ws = jnp.sort(w.ravel())
+        k = min(int(frac * (ws.shape[0] - 1) + 0.5), ws.shape[0] - 1)
+        t = ws[k]
+    else:
+        axes = (axis,) if isinstance(axis, int) else tuple(axis)
+        axes = tuple(a % w.ndim for a in axes)
+        keep = [a for a in range(w.ndim) if a not in axes]
+        perm = keep + list(axes)
+        wt = jnp.transpose(w, perm)
+        lead = wt.shape[:len(keep)]
+        ws = jnp.sort(wt.reshape(lead + (-1,)), axis=-1)
+        k = min(int(frac * (ws.shape[-1] - 1) + 0.5), ws.shape[-1] - 1)
+        t = ws[..., k]
+        # restore keepdims shape aligned with w
+        shape = [1] * w.ndim
+        for i, a in enumerate(keep):
+            shape[a] = w.shape[a]
+        t = t.reshape(shape)
+    return jax.lax.stop_gradient(t)
+
+
+def ternary_quantize(w: jax.Array, lo_frac: float = 0.2, hi_frac: float = 0.2,
+                     axis=None) -> jax.Array:
+    """Quantile-regulated ternary quantization to {-1, 0, +1}.
+
+    Thresholds are the per-group `lo_frac` / `1-hi_frac` quantiles of the
+    latent weights, so the quantized distribution is exactly
+    (lo_frac, 1-lo_frac-hi_frac, hi_frac) — the paper's 20/60/20 "weight
+    distribution regulation" made deterministic.  `axis=None` regulates over
+    the whole tensor; pass a tuple of axes to regulate per filter group
+    (e.g. per expert or per output-channel group).
+    """
+    t_lo = _sorted_threshold(w, lo_frac, axis)
+    t_hi = _sorted_threshold(w, 1.0 - hi_frac, axis)
+    hard = jnp.where(w <= t_lo, -1.0, jnp.where(w >= t_hi, 1.0, 0.0))
+    return _ste(hard.astype(w.dtype), jnp.clip(w, -1.0, 1.0))
+
+
+def binary_quantize(w: jax.Array) -> jax.Array:
+    """Sign binarization to {-1, +1} with clipped-identity STE (baseline)."""
+    hard = jnp.where(w >= 0, 1.0, -1.0)
+    return _ste(hard.astype(w.dtype), jnp.clip(w, -1.0, 1.0))
+
+
+def ternary_fractions(w_t: jax.Array) -> jax.Array:
+    """Fractions of (-1, 0, +1) — used by tests and the power model
+    (cell distribution: 20% LRS / 80% HRS with 20/60/20 regulation)."""
+    n = w_t.size
+    neg = jnp.sum(w_t < -0.5) / n
+    pos = jnp.sum(w_t > 0.5) / n
+    return jnp.stack([neg, 1.0 - neg - pos, pos])
+
+
+def distribution_regularizer(w: jax.Array, lo_frac: float = 0.2,
+                             hi_frac: float = 0.2) -> jax.Array:
+    """Soft penalty pulling the latent weight distribution toward the
+    regulated shape (keeps the quantile thresholds well-separated).  The
+    quantile quantizer already enforces the hard fractions; this term keeps
+    latent weights from collapsing to a point where the quantiles are
+    degenerate."""
+    med = jnp.mean(w)
+    spread = jnp.mean(jnp.abs(w - med))
+    return jnp.square(1.0 - spread) * (lo_frac + hi_frac)
+
+
+# ------------------------------------------------------------------ activations
+
+def binary_activation(x: jax.Array) -> jax.Array:
+    """Step activation to {0, 1} (word-line on/off) with hard-tanh-window STE."""
+    hard = (x > 0).astype(x.dtype)
+    soft = jnp.clip(0.5 * (x + 1.0), 0.0, 1.0)   # gradient window |x| <= 1
+    return _ste(hard, soft)
+
+
+def soft_sa_output(diff: jax.Array, beta: float = 4.0) -> jax.Array:
+    """Differentiable surrogate of the binary SA for variation-aware training:
+    sigmoid(beta * diff) forward-approximates the comparator; used with
+    reparametrized nonideal noise during QAT, hard comparison at inference."""
+    hard = (diff > 0).astype(diff.dtype)
+    soft = jax.nn.sigmoid(beta * diff)
+    return _ste(hard, soft)

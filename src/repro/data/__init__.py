@@ -1,0 +1,3 @@
+from repro.data.lm import SyntheticLMData, lm_batch_for_step
+from repro.data.detection import (SyntheticDetectionData, DetBatch,
+                                  render_batch, yolo_targets)

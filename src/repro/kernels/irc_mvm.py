@@ -1,0 +1,169 @@
+"""Pallas TPU kernel: fused single-shot IRC crossbar MVM + nonideal epilogue.
+
+This is the compute hot spot of the structural simulation (paper Secs. III-IV):
+for each (batch, output-channel) tile it computes, entirely in VMEM,
+
+  1. per-32-row-sub-block partial currents for both conductance planes
+     (the IR-drop block model needs them individually) — MXU batched dots;
+  2. activated-LRS counts per plane — two MXU dots;
+  3. the fused epilogue: IR-drop suffix-cumsum weighting, the paper's
+     piecewise-quartic accumulation nonlinearity, differential SA comparison
+     with offset noise and limited-sensing-range fallback — all VPU.
+
+A naive jnp composition round-trips [B, n_blocks, N] block currents and the
+count/current tensors through HBM ~10 times; the kernel keeps everything in
+VMEM scratch across the R-dimension grid walk and writes only the [B, N]
+binary output.
+
+Tiling: grid = (B/bm, N/bn, R/bk) with the R walk innermost ("arbitrary"
+semantics, accumulation in scratch).  Defaults bm=8 (sublane), bn=128
+(lane), bk=256 (8 IR blocks / MXU-friendly contraction) — sweepable; VMEM
+footprint at defaults is <1 MB, and all matmul dims are multiples of
+(8, 128) for MXU alignment.
+
+Stochastic terms (SA offset noise, unresolvable-comparison fallback bits)
+are pre-sampled inputs, so the kernel is deterministic and exactly testable
+against `ref.irc_mvm_ref` (interpret=True on CPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import IrcEpilogueParams, _NL_LO, _NL_HI
+
+
+def _nl_ratio_inline(p: jax.Array) -> jax.Array:
+    p_raw = p
+    p = jnp.clip(p_raw, 0.0, 320.0)
+    def horner(c):
+        acc = jnp.full_like(p, c[0])
+        for x in c[1:]:
+            acc = acc * p + x
+        return acc
+    ratio = jnp.where(p <= 140.0, horner(_NL_LO), horner(_NL_HI))
+    return jnp.where(p_raw < 0.5, 1.0, ratio)
+
+
+def _irc_mvm_kernel(x_ref, ep_ref, en_ref, gp_ref, gn_ref, eps_ref, rnd_ref,
+                    out_ref, blocks_p, blocks_n, p_pos, p_neg,
+                    *, params: IrcEpilogueParams, nk: int, bk: int):
+    k = pl.program_id(2)
+    blk = params.ir_block
+    nbk = bk // blk                      # IR blocks contributed this step
+
+    @pl.when(k == 0)
+    def _init():
+        blocks_p[...] = jnp.zeros_like(blocks_p)
+        blocks_n[...] = jnp.zeros_like(blocks_n)
+        p_pos[...] = jnp.zeros_like(p_pos)
+        p_neg[...] = jnp.zeros_like(p_neg)
+
+    x = x_ref[...].astype(jnp.float32)                    # (bm, bk)
+    bm = x.shape[0]
+    ep = ep_ref[...].astype(jnp.float32)                  # (bk, bn)
+    en = en_ref[...].astype(jnp.float32)
+    gp = gp_ref[...].astype(jnp.float32)
+    gn = gn_ref[...].astype(jnp.float32)
+    bn = ep.shape[1]
+
+    # activated-LRS counts: full-tile MXU dots
+    dot = functools.partial(jax.lax.dot_general,
+                            dimension_numbers=(((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    p_pos[...] += dot(x, gp)
+    p_neg[...] += dot(x, gn)
+
+    # per-IR-block partial currents: batched MXU dots over the 32-row blocks
+    xb = x.reshape(bm, nbk, blk).transpose(1, 0, 2)       # (nbk, bm, 32)
+    epb = ep.reshape(nbk, blk, bn)
+    enb = en.reshape(nbk, blk, bn)
+    bdot = functools.partial(
+        jax.lax.dot_general,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    blocks_p[pl.ds(k * nbk, nbk)] = bdot(xb, epb)         # (nbk, bm, bn)
+    blocks_n[pl.ds(k * nbk, nbk)] = bdot(xb, enb)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        def line(blocks):                                 # (NBT, bm, bn)
+            if params.apply_ir:
+                rev = blocks[::-1]
+                suffix = jnp.cumsum(rev, axis=0)[::-1]
+                cum = jnp.cumsum(suffix, axis=0) - suffix[0:1]
+                factors = jnp.clip(1.0 - params.ir_alpha * cum, 0.0, 1.0)
+                return jnp.sum(blocks * factors, axis=0)
+            return jnp.sum(blocks, axis=0)
+
+        i_pos = line(blocks_p[...])
+        i_neg = line(blocks_n[...])
+        pp, pn = p_pos[...], p_neg[...]
+        if params.apply_nonlinearity:
+            i_pos = i_pos * _nl_ratio_inline(pp)
+            i_neg = i_neg * _nl_ratio_inline(pn)
+        diff = i_pos - i_neg
+        if params.output == "diff":
+            out_ref[...] = diff
+            return
+        if params.apply_sa:
+            p_pair = pp + pn
+            sigma = 0.5 * (params.sa_c0 + params.sa_c1 * p_pair
+                           + params.sa_c2 * p_pair * p_pair + params.sa_extra)
+            diff = diff + sigma * eps_ref[...]
+        out = (diff > 0).astype(jnp.float32)
+        if params.apply_range:
+            fail = jnp.logical_or(
+                jnp.minimum(i_pos, i_neg) < params.sense_low,
+                jnp.maximum(i_pos, i_neg) > params.sense_high)
+            out = jnp.where(fail, rnd_ref[...], out)
+        out_ref[...] = out
+
+
+def irc_mvm_pallas(x: jax.Array, ep: jax.Array, en: jax.Array,
+                   gp: jax.Array, gn: jax.Array,
+                   eps_sa: jax.Array, rnd_bits: jax.Array,
+                   params: IrcEpilogueParams,
+                   *, bm: int = 8, bn: int = 128, bk: int = 256,
+                   interpret: bool = False) -> jax.Array:
+    """Raw pallas_call wrapper; shapes must already be tile-aligned
+    (B % bm == N % bn == R % bk == 0, bk % ir_block == 0).  Use
+    `repro.kernels.ops.irc_mvm` for the padded/jit public entry point."""
+    B, R = x.shape
+    N = ep.shape[1]
+    assert R % bk == 0 and bk % params.ir_block == 0, (R, bk, params.ir_block)
+    assert B % bm == 0 and N % bn == 0, (B, bm, N, bn)
+    nk = R // bk
+    nbt = R // params.ir_block
+
+    grid = (B // bm, N // bn, nk)
+    kernel = functools.partial(_irc_mvm_kernel, params=params, nk=nk, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # x
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # ep
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # en
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # gp
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # gn
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),   # eps_sa
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),   # rnd_bits
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((nbt, bm, bn), jnp.float32),   # blocks_p
+            pltpu.VMEM((nbt, bm, bn), jnp.float32),   # blocks_n
+            pltpu.VMEM((bm, bn), jnp.float32),        # p_pos
+            pltpu.VMEM((bm, bn), jnp.float32),        # p_neg
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, ep, en, gp, gn, eps_sa, rnd_bits)

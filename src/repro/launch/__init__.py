@@ -1,0 +1,4 @@
+# repro.launch — mesh construction, multi-pod dry-run, training/serving
+# entry points.  NOTE: dryrun.py must be the process entry (python -m
+# repro.launch.dryrun) so its XLA_FLAGS device-count override precedes any
+# jax initialization.

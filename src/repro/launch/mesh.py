@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state.  The production target is a TPU v5e pod of
+16x16 = 256 chips; the multi-pod configuration stacks 2 pods = 512 chips
+with a leading "pod" mesh axis (data-center network between pods, ICI
+within a pod).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has (tests / examples): 1D data mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,236 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) single-pod cell, reconstructs per-device totals from the
+two unrolled COST PROBES (XLA's cost_analysis counts while-loop bodies once,
+so the production scanned module undercounts by the trip count — the probe
+delta method recovers exact per-layer costs):
+
+    body   = probe(L0+1) - probe(L0)          (one extra scanned-family layer)
+    prefix = probe(L0) - body                  (embed/head/opt + dense prefix)
+    total  = prefix + body * n_scanned_layers  (+ analytic RWKV recurrence)
+
+Terms vs TPU v5e: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+    compute    = HLO_FLOPs_dev / 197e12
+    memory     = HLO_bytes_dev / 819e9
+    collective = collective_bytes_dev / 50e9
+MODEL_FLOPS = 6*N*D (train, dense) / 6*N_active*D (MoE) / 2*N*D (inference).
+
+Caveats (documented, same for every cell — comparisons remain valid):
+  * "bytes accessed" comes from the CPU-backend HLO; TPU fuses more
+    aggressively, so the memory term is an upper bound.
+  * train collective totals scale by the microbatch count (FSDP gathers
+    re-run per microbatch).
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--csv out.csv]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s/link
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+
+def _load(path: Path) -> Optional[dict]:
+    if not path.exists():
+        return None
+    rec = json.loads(path.read_text())
+    return rec if rec.get("status") == "ok" else None
+
+
+def _metrics(rec: dict) -> Dict[str, float]:
+    ca = rec["cost_analysis"]
+    # XLA:CPU float-normalizes bf16 to f32 before the final HLO, so every
+    # byte count for a bf16 config is ~2x the TPU value; corrected here.
+    # (f32 optimizer moments are touched once per step — second-order.)
+    corr = 0.5 if rec.get("dtype") == "bfloat16" else 1.0
+    out = {"flops": ca.get("flops", 0.0),
+           # TPU fusion-aware HBM model when available; raw CPU-HLO bytes
+           # (which count unfused elementwise chains, ~20x high) otherwise
+           "bytes": corr * float(rec.get("hbm_bytes_est")
+                                 or ca.get("bytes accessed", 0.0)),
+           "bytes_raw": ca.get("bytes accessed", 0.0),
+           "coll": corr * float(rec["collectives"]["total_bytes"])}
+    for c in _COLL:
+        out[f"coll_{c}"] = corr * float(rec["collectives"][c]["bytes"])
+    return out
+
+
+def _rwkv_recurrence_flops(cfg, shape_kind: str, global_batch: int,
+                           seq_len: int, dp_shards: int) -> float:
+    """Analytic WKV-recurrence add-on (the time scan is a while loop even in
+    the probes).  ~8 flops per (head, hd, hd) element per token."""
+    if cfg.block != "rwkv" or shape_kind == "decode":
+        return 0.0
+    H = cfg.d_model // cfg.head_dim
+    per_token = 8.0 * H * cfg.head_dim * cfg.head_dim
+    tokens_dev = global_batch * seq_len / dp_shards
+    mult = 3.0 if shape_kind == "train" else 1.0
+    return per_token * tokens_dev * cfg.n_layers * mult
+
+
+def analyze_cell(arch: str, shape: str, probe_suffixes=None,
+                 out_dir: Path = OUT_DIR) -> Optional[dict]:
+    from repro.configs.registry import get_config
+    from repro.launch.dryrun import probe_pair
+
+    main = _load(out_dir / f"{arch}__{shape}__single.json")
+    if main is None:
+        return None
+    l1, l2 = probe_pair(arch) if probe_suffixes is None else probe_suffixes
+    p1 = _load(out_dir / f"{arch}__{shape}__single__probe{l1}.json")
+    p2 = _load(out_dir / f"{arch}__{shape}__single__probe{l2}.json")
+    p1m = _load(out_dir / f"{arch}__{shape}__single__probe{l1}mb2.json")
+    p2m = _load(out_dir / f"{arch}__{shape}__single__probe{l2}mb2.json")
+    cfg = get_config(arch, "full")
+    devices = main["devices"]
+    kind = main["kind"]
+    mb = main["microbatch"] or (max(1, main["global_batch"] // 32)
+                                if kind == "train" else 1)
+
+    if p1 is not None and p2 is not None:
+        m1, m2 = _metrics(p1), _metrics(p2)
+        n_scanned = cfg.n_layers - cfg.n_dense_prefix
+
+        def extrapolate(v1, v2):
+            body = v2 - v1
+            return max((v1 - body) + body * n_scanned, 0.0)
+
+        totals = {k: extrapolate(m1[k], m2[k]) for k in m1}
+        if kind == "train" and p1m is not None and p2m is not None:
+            # separate param collectives (x mb in production: FSDP gathers /
+            # grad reductions per microbatch) from activation collectives
+            # (total invariant to the microbatch split):
+            #   coll(L, MB) = act(L) + MB * par(L)
+            m1m, m2m = _metrics(p1m), _metrics(p2m)
+            for k in list(totals):
+                if not k.startswith("coll"):
+                    continue
+                par1, par2 = m1m[k] - m1[k], m2m[k] - m2[k]
+                act1, act2 = m1[k] - par1, m2[k] - par2
+                par_tot = extrapolate(par1, par2)
+                act_tot = extrapolate(act1, act2)
+                totals[k] = act_tot + mb * par_tot
+            method = f"probe-delta(L={l1},{l2};mb-split)"
+        elif kind == "train":
+            totals["coll"] *= mb
+            for c in _COLL:
+                totals[f"coll_{c}"] *= mb
+            method = f"probe-delta(L={l1},{l2};coll*mb UPPER BOUND)"
+        else:
+            method = f"probe-delta(L={l1},{l2})"
+    else:
+        totals = _metrics(main)
+        method = "raw-hlo (UNDERCOUNTS scan bodies)"
+
+    # analytic recurrence add-on (rwkv)
+    dp = devices // 16 if "model" in ("model",) else devices
+    dp_shards = max(devices // 16, 1)   # single-pod: data axis = 16
+    totals["flops"] += _rwkv_recurrence_flops(
+        cfg, kind, main["global_batch"], main["seq_len"], dp_shards)
+
+    tokens = main["global_batch"] * (main["seq_len"] if kind != "decode" else 1)
+    n = cfg.param_count()
+    n_active = cfg.active_param_count()
+    model_flops = (6.0 * n_active * tokens if kind == "train"
+                   else 2.0 * n_active * tokens)
+    model_flops_dev = model_flops / devices
+
+    compute_s = totals["flops"] / PEAK_FLOPS
+    memory_s = totals["bytes"] / HBM_BW
+    coll_s = totals["coll"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = terms[dominant]
+    model_time = model_flops_dev / PEAK_FLOPS
+    return {
+        "arch": arch, "shape": shape, "kind": kind, "devices": devices,
+        "method": method,
+        "flops_dev": totals["flops"], "bytes_dev": totals["bytes"],
+        "coll_dev": totals["coll"],
+        "coll_breakdown": {c: totals[f"coll_{c}"] for c in _COLL},
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops": model_flops, "model_flops_dev": model_flops_dev,
+        "useful_ratio": model_flops_dev / max(totals["flops"], 1.0),
+        "roofline_fraction": model_time / max(bound_s, 1e-12),
+        "memory_analysis": main.get("memory_analysis", {}),
+    }
+
+
+def fix_note(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["useful_ratio"] < 0.5:
+            return ("compute-bound with <50% useful FLOPs: cut remat "
+                    "recompute (save attn outputs) or offload")
+        return "compute-bound near peak: increase arithmetic efficiency via fusion"
+    if d == "memory":
+        if row["kind"] == "decode":
+            return ("memory-bound on KV/weight streaming: quantize cache, "
+                    "grow batch, or fuse decode matmuls")
+        return ("memory-bound: fuse elementwise chains, widen per-op tiles, "
+                "avoid re-materialized activations")
+    return ("collective-bound: overlap FSDP gathers with layer compute, "
+            "reduce-scatter grads, or shrink TP degree")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", default=str(OUT_DIR.parent / "roofline.csv"))
+    ap.add_argument("--markdown", default=str(OUT_DIR.parent / "roofline.md"))
+    args = ap.parse_args()
+
+    from repro.configs.registry import list_archs
+    from repro.configs.shapes import SHAPES
+
+    rows = []
+    for arch in list_archs():
+        for shape in SHAPES:
+            row = analyze_cell(arch, shape)
+            if row:
+                rows.append(row)
+
+    import csv as _csv
+    with open(args.csv, "w", newline="") as f:
+        w = _csv.writer(f)
+        w.writerow(["arch", "shape", "kind", "method", "flops_dev",
+                    "bytes_dev", "coll_dev", "compute_s", "memory_s",
+                    "collective_s", "dominant", "model_flops_dev",
+                    "useful_ratio", "roofline_fraction"])
+        for r in rows:
+            w.writerow([r["arch"], r["shape"], r["kind"], r["method"],
+                        f"{r['flops_dev']:.4g}", f"{r['bytes_dev']:.4g}",
+                        f"{r['coll_dev']:.4g}", f"{r['compute_s']:.4g}",
+                        f"{r['memory_s']:.4g}", f"{r['collective_s']:.4g}",
+                        r["dominant"], f"{r['model_flops_dev']:.4g}",
+                        f"{r['useful_ratio']:.3f}",
+                        f"{r['roofline_fraction']:.3f}"])
+
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful FLOP ratio | roofline frac | fix |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | {fix_note(r)} |")
+    Path(args.markdown).write_text("\n".join(lines) + "\n")
+    print("\n".join(lines))
+    print(f"\nwrote {args.csv} and {args.markdown} ({len(rows)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Serving launcher: restore (or init) a model and serve batched requests
+with the slot-wave engine.  The decode step is the exact function the
+dry-run's `decode_*` cells lower for the production meshes.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b \
+      --requests 8 --slots 4 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.ckpt import CheckpointManager
+from repro.configs.registry import get_config, list_archs
+from repro.models import LM
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-medium-14b", choices=list_archs())
+    ap.add_argument("--variant", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore params from a training checkpoint")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, args.variant)
+    lm = LM(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir)
+        template = jax.eval_shape(lambda: params)
+        try:  # params-only checkpoint
+            restored, step = mgr.restore_latest(template)
+        except KeyError:  # training checkpoint: TrainState paths (params/...)
+            restored, step = mgr.restore_latest({"params": template})
+            restored = restored["params"] if restored else None
+        if restored is not None:
+            params = restored
+            print(f"restored step {step} from {args.ckpt_dir}")
+
+    engine = ServeEngine(lm, params, batch_slots=args.slots,
+                         max_len=args.max_len,
+                         temperature=args.temperature)
+    rng = jax.random.PRNGKey(1)
+    prompts = []
+    for i in range(args.requests):
+        rng, k = jax.random.split(rng)
+        n = 2 + i % 6
+        prompts.append([int(t) for t in
+                        jax.random.randint(k, (n,), 0, cfg.vocab_size)])
+    t0 = time.time()
+    results = engine.generate(prompts, max_new_tokens=args.max_new)
+    dt = time.time() - t0
+    new = sum(len(r.tokens) for r in results)
+    for i, r in enumerate(results[:4]):
+        print(f"req {i}: {len(r.prompt)} prompt toks -> {r.tokens[:8]}...")
+    print(f"{len(results)} requests, {new} new tokens, {dt:.1f}s "
+          f"({new/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

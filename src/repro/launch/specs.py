@@ -1,0 +1,51 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input of every
+(arch x shape) cell — weak-type-correct, shardable, zero allocation.
+
+For modality archs ([audio] musicgen / [vlm] chameleon) the frontend is a
+stub per the assignment: inputs are precomputed token ids in the model's
+vocab (EnCodec frames / unified text+VQ codes respectively).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.lm_config import LMConfig
+from repro.models.transformer import LM
+
+PyTree = Any
+
+
+def train_input_specs(cfg: LMConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+
+
+def prefill_input_specs(cfg: LMConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def decode_input_specs(lm: LM, shape: ShapeSpec
+                       ) -> Tuple[Any, PyTree]:
+    """(tokens [B,1], abstract KV/state cache sized for shape.seq_len)."""
+    B = shape.global_batch
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    cache = jax.eval_shape(lambda: lm.init_cache(B, shape.seq_len))
+    return tokens, cache
+
+
+def input_specs(lm: LM, shape: ShapeSpec) -> Dict[str, Any]:
+    """Unified entry: the dict of abstract inputs the shape's step takes."""
+    if shape.kind == "train":
+        return {"batch": train_input_specs(lm.cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_input_specs(lm.cfg, shape)}
+    tokens, cache = decode_input_specs(lm, shape)
+    return {"tokens": tokens, "cache": cache}

@@ -1,0 +1,52 @@
+"""Summarize dry-run artifacts into the EXPERIMENTS.md §Dry-run table.
+
+  PYTHONPATH=src python -m repro.launch.summarize
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def main():
+    rows = []
+    for p in sorted(OUT_DIR.glob("*.json")):
+        if "probe" in p.name:
+            continue
+        r = json.loads(p.read_text())
+        if r.get("status") == "skipped":
+            rows.append((r["arch"], r["shape"], r["mesh"], "SKIP", "", "",
+                         "", ""))
+            continue
+        if r.get("status") != "ok":
+            rows.append((r["arch"], r["shape"], r["mesh"], "ERROR", "", "",
+                         "", ""))
+            continue
+        ma = r.get("memory_analysis", {})
+        args_gb = ma.get("argument_size_in_bytes", 0) / 1e9
+        temp_gb = ma.get("temp_size_in_bytes", 0) / 1e9
+        coll = r["collectives"]
+        coll_gb = coll["total_bytes"] / 1e9
+        kinds = "+".join(k[:2] for k in ("all-gather", "all-reduce",
+                                         "reduce-scatter", "all-to-all",
+                                         "collective-permute")
+                         if coll[k]["count"])
+        rows.append((r["arch"], r["shape"], r["mesh"], "ok",
+                     f"{args_gb:.2f}", f"{temp_gb:.2f}", f"{coll_gb:.2f}",
+                     kinds))
+
+    print("| arch | shape | mesh | status | args GB/dev | temp GB/dev | "
+          "collective GB (HLO body) | collective kinds |")
+    print("|---|---|---|---|---|---|---|---|")
+    for row in rows:
+        print("| " + " | ".join(str(c) for c in row) + " |")
+    n_ok = sum(1 for r in rows if r[3] == "ok")
+    n_skip = sum(1 for r in rows if r[3] == "SKIP")
+    n_err = sum(1 for r in rows if r[3] == "ERROR")
+    print(f"\n{n_ok} ok / {n_skip} skipped / {n_err} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro.models — pure-JAX model zoo substrate.
+
+Decoder-only LM composition covering the 10 assigned architectures (dense /
+GQA / sliding-window / softcap / MoE / hybrid-SSM / RWKV6) plus the paper's
+own IRC object detector.  Params are plain nested dicts built from ParamSpec
+tables (single source of truth for shapes + logical sharding axes).
+"""
+from repro.models.common import ParamSpec, materialize, logical_axes_tree
+from repro.models.lm_config import LMConfig
+from repro.models.transformer import LM
+from repro.models.detector import IRCDetector, DetectorConfig

@@ -1,0 +1,151 @@
+"""GQA attention with sliding-window / softcap / qk-norm variants.
+
+Grouped layout throughout: q is [B, S, KV, G, hd] (G = q heads per kv head)
+so GQA never materializes repeated KV.  Scores/softmax in f32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, rms_norm, rope, softcap
+from repro.models.lm_config import LMConfig
+
+
+def attn_specs(cfg: LMConfig) -> Dict[str, ParamSpec]:
+    d, hd = cfg.d_model, cfg.head_dim
+    pd = cfg.pdtype
+    specs = {
+        "wq": ParamSpec((d, cfg.n_heads * hd), ("embed", "heads_qkv"), dtype=pd),
+        "wk": ParamSpec((d, cfg.n_kv_heads * hd), ("embed", "kv_qkv"), dtype=pd),
+        "wv": ParamSpec((d, cfg.n_kv_heads * hd), ("embed", "kv_qkv"), dtype=pd),
+        "wo": ParamSpec((cfg.n_heads * hd, d), ("heads_qkv", "embed"), dtype=pd),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), (None,), init="ones", dtype=pd)
+        specs["k_norm"] = ParamSpec((hd,), (None,), init="ones", dtype=pd)
+    return specs
+
+
+def _qkv(params, x, cfg: LMConfig, positions):
+    from jax.ad_checkpoint import checkpoint_name
+    B, S, _ = x.shape
+    kv, g, hd = cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim
+    q = checkpoint_name(x @ params["wq"].astype(x.dtype),
+                        "attn_q").reshape(B, S, kv, g, hd)
+    k = checkpoint_name(x @ params["wk"].astype(x.dtype),
+                        "attn_k").reshape(B, S, kv, hd)
+    v = checkpoint_name(x @ params["wv"].astype(x.dtype),
+                        "attn_v").reshape(B, S, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.pos == "rope":
+        qf = q.reshape(B, S, kv * g, hd)
+        qf = rope(qf, positions, cfg.rope_theta)
+        q = qf.reshape(B, S, kv, g, hd)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(q_pos: jax.Array, k_pos: jax.Array, window: Optional[int]
+          ) -> jax.Array:
+    """[Sq, Sk] additive mask: causal + optional sliding window."""
+    causal = q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        causal = jnp.logical_and(causal,
+                                 q_pos[:, None] - k_pos[None, :] < window)
+    return jnp.where(causal, 0.0, -1e30).astype(jnp.float32)
+
+
+def _sdpa(q, k, v, mask, cfg: LMConfig, g_major: bool = False):
+    """q [B,Sq,KV,G,hd], k/v [B,Sk,KV,hd], mask [Sq,Sk] -> [B,Sq,KV*G*hd].
+
+    `g_major=True` merges heads as (G,KV,hd) instead of (KV,G,hd): under
+    q-group TP the merged head dim is then contiguous in the sharded G, so
+    the reshape preserves the sharding (otherwise XLA re-replicates the
+    [B,KV,G,S,S] probs in the backward — measured 137 GB all-gathers per
+    layer on llama3-405b).  wo is learned, so the head order is an internal
+    layout choice applied consistently in train and decode.
+    """
+    scale = cfg.head_dim ** -0.5
+    # scores accumulate in the MXU's native f32 and round to the activation
+    # dtype at output; softmax itself stays f32.  Requesting an f32 RESULT
+    # (preferred_element_type) would make every backward cotangent through
+    # the q/k/v projections f32 — measured 2x on the dominant row-parallel
+    # all-reduces of llama3-405b training.
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k) * scale
+    scores = scores.astype(jnp.float32)
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    scores = scores + mask
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    B, Sq = out.shape[0], out.shape[1]
+    if g_major:
+        out = out.transpose(0, 1, 3, 2, 4)      # [B,Sq,G,KV,hd]
+    return out.reshape(B, Sq, cfg.n_heads * cfg.head_dim)
+
+
+def attention(params, x: jax.Array, cfg: LMConfig, *, is_global: jax.Array,
+              positions: jax.Array, constrain=None, mode=None,
+              out_constrain=None) -> jax.Array:
+    """Training/prefill attention.  `is_global` is a traced per-layer bool
+    (scan-friendly): local layers see a sliding-window mask.  `constrain`
+    (q,k,v)->(q,k,v) pins the TP scheme; `mode` is LM.attn_mode;
+    `out_constrain(x, axes)` pins the merged output sharding."""
+    S = x.shape[1]
+    q, k, v = _qkv(params, x, cfg, positions)
+    if constrain is not None:
+        q, k, v = constrain(q, k, v)
+    pos = positions[0] if positions.ndim > 1 else positions
+    full = _mask(pos, pos, None)
+    if cfg.attn_pattern != "global":
+        local = _mask(pos, pos, cfg.window)
+        mask = jnp.where(is_global, full, local)
+    else:
+        mask = full
+    out = _sdpa(q, k, v, mask, cfg, g_major=(mode == "q_groups"))
+    if out_constrain is not None:
+        out = out_constrain(out, ("act_batch", None, "act_heads"))
+    return out @ params["wo"].astype(x.dtype)
+
+
+def attention_decode(params, x: jax.Array, cache: Dict[str, jax.Array],
+                     cfg: LMConfig, *, is_global: jax.Array,
+                     cur_index: jax.Array, constrain=None, mode=None,
+                     out_constrain=None
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode with a KV cache.
+
+    x [B,1,D]; cache {"k": [B,Smax,KV,hd], "v": ...}; cur_index scalar = the
+    position being written.  Returns (out [B,1,D], updated cache).
+    """
+    B = x.shape[0]
+    s_max = cache["k"].shape[1]
+    positions = jnp.full((B, 1), cur_index, jnp.int32)
+    q, k, v = _qkv(params, x, cfg, positions)
+    if constrain is not None:
+        q, k, v = constrain(q, k, v)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), cur_index, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), cur_index, axis=1)
+    k_pos = jnp.arange(s_max)
+    valid = k_pos <= cur_index
+    if cfg.attn_pattern != "global":
+        in_window = k_pos > cur_index - cfg.window
+        valid = jnp.where(is_global, valid, jnp.logical_and(valid, in_window))
+    mask = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[None, :]
+    out = _sdpa(q, ck.astype(x.dtype), cv.astype(x.dtype), mask, cfg,
+                g_major=(mode == "q_groups"))
+    if out_constrain is not None:
+        out = out_constrain(out, ("act_batch", None, "act_heads"))
+    return out @ params["wo"].astype(x.dtype), {"k": ck, "v": cv}
+
+
+def init_kv_cache(cfg: LMConfig, batch: int, s_max: int, n_layers: int,
+                  dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    shape = (n_layers, batch, s_max, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -1,0 +1,291 @@
+"""The paper's object-detection model (Fig. 11): YOLOv2-style backbone of
+binary GROUP convolutions (group size 60) mapped onto IRC macros.
+
+Two designs, matching the paper's ablation:
+  * baseline: binary weights + in-memory BN + partial-sum accumulation
+  * proposed: ternary weights (20/60/20), NO BN, single-shot accumulation,
+    extra common-mode bias rows
+
+Execution paths:
+  * mode="train": differentiable QAT (STE quantizers + noise surrogate)
+  * mode="eval":  full structural crossbar simulation per group (each group
+    channel = one differential column pair; fan-in 3*3*60=540 cells + bias
+    rows, exactly the paper's 636-cell mapping arithmetic)
+
+First (stem) and last (head) layers are digital, as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nonideal as ni
+from repro.core.crossbar import irc_linear_train, crossbar_forward
+from repro.core.macro import MacroSpec, DEFAULT_MACRO
+from repro.core.mapping import ternary_planes, binary_planes, fold_bn_to_bias_units
+from repro.core.ternary import (ternary_quantize, binary_quantize,
+                                binary_activation)
+from repro.models.common import ParamSpec, materialize, logical_axes_tree
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectorConfig:
+    img_hw: Tuple[int, int] = (576, 1024)     # paper: 1024x576 (w x h)
+    n_classes: int = 3                        # IVS 3cls
+    n_anchors: int = 5
+    group: int = 60                           # paper's group size
+    # channel plan: stem -> stages (each stage = GConv blocks + downsample)
+    stage_channels: Tuple[int, ...] = (60, 120, 240, 480)
+    blocks_per_stage: Tuple[int, ...] = (1, 2, 2, 2)
+    scheme: str = "ternary"                   # proposed | "binary" baseline
+    use_bn: bool = False                      # baseline: in-memory BN
+    accumulation: str = "single_shot"         # baseline: "partial_sum"
+    bias_rows: int = 32
+    partial_rows: int = 212                   # ~300uA limit at nominal V_WL
+    dtype: Any = jnp.float32
+
+    @property
+    def strides(self) -> int:
+        return 2 ** (len(self.stage_channels) + 1)   # stem /2 + pools
+
+
+class IRCDetector:
+    """init/apply for the detector; `apply` returns raw head predictions
+    [B, gh, gw, A*(5+C)]."""
+
+    def __init__(self, cfg: DetectorConfig, spec: MacroSpec = DEFAULT_MACRO):
+        self.cfg = cfg
+        self.spec = spec
+
+    # ------------------------------------------------------------ params
+    def specs(self) -> Dict[str, PyTree]:
+        cfg = self.cfg
+        out: Dict[str, PyTree] = {
+            # digital stem: 3x3 s2 conv to first stage width
+            "stem": ParamSpec((3, 3, 3, cfg.stage_channels[0]),
+                              (None, None, None, "mlp"), dtype=cfg.dtype),
+            "stem_bn": {"gamma": ParamSpec((cfg.stage_channels[0],), ("mlp",),
+                                           init="ones", dtype=cfg.dtype),
+                        "beta": ParamSpec((cfg.stage_channels[0],), ("mlp",),
+                                          init="zeros", dtype=cfg.dtype)},
+        }
+        for s, (ch, nb) in enumerate(zip(cfg.stage_channels,
+                                         cfg.blocks_per_stage)):
+            c_in = cfg.stage_channels[max(0, s - 1)] if s else ch
+            for b in range(nb):
+                cin = c_in if b == 0 else ch
+                blk: Dict[str, PyTree] = {
+                    "w": ParamSpec((3 * 3 * cfg.group, cfg.group,
+                                    max(cin, ch) // cfg.group),
+                                   (None, "mlp", None), dtype=cfg.dtype),
+                }
+                if cfg.use_bn:
+                    blk["bn"] = {
+                        "gamma": ParamSpec((ch,), ("mlp",), init="ones",
+                                           dtype=cfg.dtype),
+                        "beta": ParamSpec((ch,), ("mlp",), init="zeros",
+                                          dtype=cfg.dtype),
+                        "mean": ParamSpec((ch,), ("mlp",), init="zeros",
+                                          dtype=cfg.dtype),
+                        "var": ParamSpec((ch,), ("mlp",), init="ones",
+                                         dtype=cfg.dtype),
+                    }
+                out[f"s{s}b{b}"] = blk
+        head_in = cfg.stage_channels[-1]
+        out["head"] = ParamSpec(
+            (1 * 1 * head_in, cfg.n_anchors * (5 + cfg.n_classes)),
+            (None, "mlp"), dtype=cfg.dtype)
+        out["head_b"] = ParamSpec((cfg.n_anchors * (5 + cfg.n_classes),),
+                                  ("mlp",), init="zeros", dtype=cfg.dtype)
+        return out
+
+    def init(self, key: jax.Array) -> PyTree:
+        return materialize(key, self.specs())
+
+    def logical_axes(self) -> PyTree:
+        return logical_axes_tree(self.specs())
+
+    # ------------------------------------------------------------ blocks
+    def _gconv_weights(self, blk: PyTree, cin: int, cout: int) -> jax.Array:
+        """Per-group latent weights [(g) 540, group, n_groups] -> quantized
+        full conv kernel [3,3,cin,cout] (block-diagonal across groups)."""
+        cfg = self.cfg
+        w = blk["w"]                         # [540, group, n_groups]
+        n_groups = cout // cfg.group
+        if cfg.scheme == "ternary":
+            wq = ternary_quantize(w, axis=(0, 1))
+        else:
+            wq = binary_quantize(w)
+        # assemble block-diagonal grouped kernel
+        wq = wq.reshape(3, 3, cfg.group, cfg.group, n_groups)
+        return wq
+
+    def _gconv(self, blk: PyTree, x: jax.Array, cin: int, cout: int, *,
+               mode: str, key: jax.Array, cfg_ni: ni.NonidealConfig,
+               sa_extra: float = 0.0) -> jax.Array:
+        """Binary group conv + (baseline) BN + binary activation."""
+        cfg = self.cfg
+        n_groups = cout // cfg.group
+        # inputs are {0,1} activations from the previous layer
+        if mode == "train":
+            wq = self._gconv_weights(blk, cin, cout)   # [3,3,g,g,ng]
+            xg = x.reshape(x.shape[:-1] + (n_groups, cfg.group))
+            outs = []
+            for g in range(n_groups):
+                k = wq[..., g]                          # [3,3,g,g]
+                outs.append(jax.lax.conv_general_dilated(
+                    xg[..., g, :], k, (1, 1), "SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC")))
+            pre = jnp.concatenate(outs, axis=-1)        # [B,H,W,cout]
+            if cfg.use_bn:
+                bn = blk["bn"]
+                mu = jnp.mean(pre, axis=(0, 1, 2))
+                var = jnp.var(pre, axis=(0, 1, 2))
+                # |gamma|: the in-memory BN fold (Fig. 13a) is only
+                # sign-preserving for positive gamma, so the baseline QAT
+                # constrains it (standard BNN-BN folding practice)
+                pre = (jnp.abs(bn["gamma"]) * (pre - mu)
+                       / jnp.sqrt(var + 1e-5) + bn["beta"])
+            if cfg_ni.any():
+                # QAT noise surrogate at the pre-activation level
+                p_pair = jnp.sum(jax.lax.stop_gradient(x), axis=-1,
+                                 keepdims=True) * 0.4 * 9.0 / cin * cfg.group
+                std = 0.0
+                if cfg_ni.device_variation:
+                    from repro.core.crossbar import variation_noise_std
+                    std = std + variation_noise_std(p_pair, self.spec.sigma_lrs)
+                if cfg_ni.sa_variation:
+                    std = std + 0.5 * ni.sa_required_diff(p_pair, self.spec)
+                if cfg_ni.device_variation or cfg_ni.sa_variation:
+                    pre = pre + std * jax.random.normal(key, pre.shape)
+            return binary_activation(pre)
+        return self._gconv_structural(blk, x, cin, cout, key=key,
+                                      cfg_ni=cfg_ni, sa_extra=sa_extra)
+
+    def _gconv_structural(self, blk: PyTree, x: jax.Array, cin: int,
+                          cout: int, *, key: jax.Array,
+                          cfg_ni: ni.NonidealConfig,
+                          sa_extra: float = 0.0) -> jax.Array:
+        """Full crossbar sim: im2col per group -> mapped planes -> SA bits."""
+        cfg, spec = self.cfg, self.spec
+        n_groups = cout // cfg.group
+        B, H, W, _ = x.shape
+        patches = jax.lax.conv_general_dilated_patches(
+            x, (3, 3), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))   # [B,H,W,cin*9]
+        patches = patches.reshape(B, H, W, cin, 9)
+        xg = patches.reshape(B, H, W, n_groups, cfg.group, 9)
+        wq = jax.lax.stop_gradient(self._gconv_weights(blk, cin, cout))
+        wq = wq.reshape(9, cfg.group, cfg.group, n_groups)
+        outs = []
+        for g in range(n_groups):
+            w_flat = wq[..., g].reshape(9 * cfg.group, cfg.group)
+            if cfg.scheme == "ternary":
+                mapped = ternary_planes(w_flat, bias_rows=cfg.bias_rows)
+            else:
+                bn_units = None
+                if cfg.use_bn:
+                    bn = blk["bn"]
+                    sl = slice(g * cfg.group, (g + 1) * cfg.group)
+                    bn_units = fold_bn_to_bias_units(
+                        jnp.abs(bn["gamma"][sl]), bn["beta"][sl],
+                        bn["mean"][sl], bn["var"][sl])
+                mapped = binary_planes(w_flat, bn_bias_units=bn_units,
+                                       spec=spec)
+            # im2col ordering: mapped rows are spatial-major (9, group)
+            x_bits = xg[..., g, :, :].transpose(0, 1, 2, 4, 3).reshape(
+                B, H, W, 9 * cfg.group)
+            out = crossbar_forward(jax.random.fold_in(key, g),
+                                   x_bits.reshape(B * H * W, -1), mapped,
+                                   cfg=cfg_ni, spec=spec,
+                                   accumulation=cfg.accumulation,
+                                   partial_rows=cfg.partial_rows,
+                                   sa_extra_units=sa_extra)
+            outs.append(out.reshape(B, H, W, cfg.group))
+        return jnp.concatenate(outs, axis=-1)
+
+    # ------------------------------------------------------------ BN calib
+    def calibrate_bn(self, params: PyTree, images: jax.Array,
+                     key: Optional[jax.Array] = None) -> PyTree:
+        """Populate BN running stats from a calibration batch (baseline
+        design): the in-memory BN mapping folds mean/var into bias cells at
+        deployment, so they must reflect the trained activations.  No-op for
+        the BN-free proposed design."""
+        if not self.cfg.use_bn:
+            return params
+        cfg = self.cfg
+        key = key if key is not None else jax.random.PRNGKey(0)
+        params = jax.tree.map(lambda x: x, params)  # shallow copy
+        x = jax.lax.conv_general_dilated(
+            images.astype(cfg.dtype), params["stem"], (2, 2), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        bn = params["stem_bn"]
+        mu, var = jnp.mean(x, (0, 1, 2)), jnp.var(x, (0, 1, 2))
+        x = binary_activation(bn["gamma"] * (x - mu) / jnp.sqrt(var + 1e-5)
+                              + bn["beta"])
+        for s, (ch, nb) in enumerate(zip(cfg.stage_channels,
+                                         cfg.blocks_per_stage)):
+            c_in = cfg.stage_channels[max(0, s - 1)] if s else ch
+            for b in range(nb):
+                cin = c_in if b == 0 else ch
+                if cin < ch:
+                    x = jnp.concatenate([x] * (ch // cin), axis=-1)
+                    cin = ch
+                blk = dict(params[f"s{s}b{b}"])
+                wq = self._gconv_weights(blk, cin, ch)
+                xg = x.reshape(x.shape[:-1] + (ch // cfg.group, cfg.group))
+                outs = [jax.lax.conv_general_dilated(
+                    xg[..., g, :], wq[..., g], (1, 1), "SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"))
+                    for g in range(ch // cfg.group)]
+                pre = jnp.concatenate(outs, axis=-1)
+                mu, var = jnp.mean(pre, (0, 1, 2)), jnp.var(pre, (0, 1, 2))
+                bnp = dict(blk["bn"])
+                bnp["mean"], bnp["var"] = mu, var
+                blk["bn"] = bnp
+                params[f"s{s}b{b}"] = blk
+                pre = (bnp["gamma"] * (pre - mu) / jnp.sqrt(var + 1e-5)
+                       + bnp["beta"])
+                x = binary_activation(pre)
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
+        return params
+
+    # ------------------------------------------------------------ forward
+    def apply(self, params: PyTree, images: jax.Array, *, mode: str = "train",
+              key: Optional[jax.Array] = None,
+              cfg_ni: ni.NonidealConfig = ni.NonidealConfig.none(),
+              sa_extra: float = 0.0) -> jax.Array:
+        """images [B,H,W,3] in [0,1] -> head predictions [B,gh,gw,A*(5+C)]."""
+        cfg = self.cfg
+        key = key if key is not None else jax.random.PRNGKey(0)
+        x = jax.lax.conv_general_dilated(
+            images.astype(cfg.dtype), params["stem"], (2, 2), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        bn = params["stem_bn"]
+        mu = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        x = bn["gamma"] * (x - mu) / jnp.sqrt(var + 1e-5) + bn["beta"]
+        x = binary_activation(x)
+
+        for s, (ch, nb) in enumerate(zip(cfg.stage_channels,
+                                         cfg.blocks_per_stage)):
+            c_in = cfg.stage_channels[max(0, s - 1)] if s else ch
+            for b in range(nb):
+                cin = c_in if b == 0 else ch
+                if cin < ch:   # widen by repetition before the block
+                    x = jnp.concatenate([x] * (ch // cin), axis=-1)
+                    cin = ch
+                x = self._gconv(params[f"s{s}b{b}"], x, cin, ch, mode=mode,
+                                key=jax.random.fold_in(key, s * 10 + b),
+                                cfg_ni=cfg_ni, sa_extra=sa_extra)
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
+        B, gh, gw, chn = x.shape
+        head = x.reshape(B, gh, gw, chn) @ params["head"] + params["head_b"]
+        return head

@@ -1,0 +1,108 @@
+"""Token-choice top-k MoE with capacity-based scatter dispatch (EP-friendly).
+
+Dispatch avoids the O(T * E * C) one-hot einsum: slot positions come from a
+per-expert cumulative count, tokens scatter into [E, C, D] buckets, experts
+run as one batched SwiGLU over the expert dimension (shardable over the
+'model'/EP mesh axis -> XLA inserts the all-to-all), and outputs gather back
+with router weights.  Tokens beyond capacity are dropped (standard
+capacity-factor semantics); the router adds a load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+from repro.models.lm_config import LMConfig
+
+
+def moe_specs(cfg: LMConfig) -> Dict[str, ParamSpec]:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    pd = cfg.pdtype
+    return {
+        "router": ParamSpec((d, e), ("embed", "experts"), dtype=jnp.float32),
+        "w_gate": ParamSpec((e, d, ff), ("experts", "embed", "mlp"), dtype=pd),
+        "w_up": ParamSpec((e, d, ff), ("experts", "embed", "mlp"), dtype=pd),
+        "w_down": ParamSpec((e, ff, d), ("experts", "mlp", "embed"), dtype=pd),
+    }
+
+
+def _capacity(cfg: LMConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * cfg.top_k * n_tokens / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)    # pad to 8 for TPU-friendly shapes
+
+
+def moe_block(params, x: jax.Array, cfg: LMConfig, constrain=None,
+              dispatch_groups: int = 1
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x [B,S,D] -> (out [B,S,D], {"aux_loss": scalar}).
+
+    Dispatch is GROUP-LOCAL: tokens split into `dispatch_groups` (= the DP
+    shard count), each group scattering into its own capacity buckets
+    [G, E, C_local, D] — G shards over the data axes, E over 'model' (EP).
+    A single global-capacity dispatch would make every data shard compute
+    capacity slots for the WHOLE global batch (measured 45x expert-FLOP
+    inflation on qwen3-moe).  `constrain(x, axes)` pins the EP sharding;
+    the scatter across (G, E) is the all-to-all.
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    G = dispatch_groups if T % dispatch_groups == 0 else 1
+    Tl = T // G
+    C = _capacity(cfg, Tl)
+    xt = x.reshape(G, Tl, D)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        params["router"])                         # [G,Tl,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)               # [G,Tl,K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style, global means)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    # slot assignment per group: position within each expert's local queue
+    sel = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)          # [G,Tl,K,E]
+    flat_sel = sel.reshape(G, Tl * K, E)
+    pos_in_expert = jnp.cumsum(flat_sel, axis=1) - flat_sel
+    slot = jnp.sum(pos_in_expert * flat_sel, axis=-1)             # [G,Tl*K]
+    eid = expert_idx.reshape(G, Tl * K)
+    keep = slot < C
+    slot = jnp.where(keep, slot, C)                               # C = trash
+
+    # scatter tokens into [G, E, C+1, D] buckets (vmapped over groups)
+    tok_ids = jnp.repeat(jnp.arange(Tl), K)
+
+    def scatter_group(xg, eidg, slotg):
+        b = jnp.zeros((E, C + 1, D), x.dtype)
+        return b.at[eidg, slotg].set(xg[tok_ids], mode="drop")
+
+    buckets = jax.vmap(scatter_group)(xt, eid, slot)              # [G,E,C+1,D]
+
+    h = buckets[:, :, :C, :]
+    if constrain is not None:
+        h = constrain(h, ("act_batch", "experts", None, "act_embed"))
+    dt = x.dtype
+    gate = jnp.einsum("gecd,edf->gecf", h, params["w_gate"].astype(dt))
+    up = jnp.einsum("gecd,edf->gecf", h, params["w_up"].astype(dt))
+    y = jnp.einsum("gecf,efd->gecd", jax.nn.silu(gate) * up,
+                   params["w_down"].astype(dt))                   # [G,E,C,D]
+    if constrain is not None:
+        y = constrain(y, ("act_batch", "experts", None, "act_embed"))
+
+    # gather back with router weights (vmapped over groups)
+    def combine_group(yg, eidg, slotg, wg):
+        y_pad = jnp.concatenate([yg, jnp.zeros((E, 1, D), yg.dtype)], axis=1)
+        y_tok = y_pad[eidg, slotg]                                # [Tl*K,D]
+        return jnp.zeros((Tl, D), dt).at[tok_ids].add(y_tok * wg[:, None])
+
+    w = (gate_vals.reshape(G, Tl * K) * keep).astype(dt)
+    out = jax.vmap(combine_group)(y, eid, slot, w)                # [G,Tl,D]
+    return out.reshape(B, S, D), {"aux_loss": aux}

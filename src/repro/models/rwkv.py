@@ -1,0 +1,139 @@
+"""RWKV6 ("Finch") block: time-mix with DATA-DEPENDENT decay + channel-mix.
+
+The WKV recurrence keeps a per-head [hd, hd] state — O(1) in sequence
+length, so rwkv6 runs the `long_500k` cell.  Training/prefill scans over
+time with `lax.scan` (compiles O(1) in T); decode is a single state update.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+from repro.models.lm_config import LMConfig
+
+
+def _heads(cfg: LMConfig) -> Tuple[int, int]:
+    hd = cfg.head_dim
+    return cfg.d_model // hd, hd
+
+
+def rwkv_specs(cfg: LMConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    ff = cfg.d_ff
+    pd = cfg.pdtype
+    lora = max(32, d // 16)
+    return {
+        "time": {
+            # token-shift lerp coefficients for r/k/v/w/g
+            "mu": ParamSpec((5, d), (None, "embed"), init="zeros", dtype=pd),
+            "w_r": ParamSpec((d, d), ("embed", "heads_qkv"), dtype=pd),
+            "w_k": ParamSpec((d, d), ("embed", "heads_qkv"), dtype=pd),
+            "w_v": ParamSpec((d, d), ("embed", "heads_qkv"), dtype=pd),
+            "w_g": ParamSpec((d, d), ("embed", "heads_qkv"), dtype=pd),
+            "w_o": ParamSpec((d, d), ("heads_qkv", "embed"), dtype=pd),
+            # data-dependent decay: w_t = exp(-exp(w0 + tanh(x A) B))
+            "decay_w0": ParamSpec((d,), ("embed",), init="zeros", dtype=jnp.float32),
+            "decay_a": ParamSpec((d, lora), ("embed", None), dtype=pd),
+            "decay_b": ParamSpec((lora, d), (None, "embed"),
+                                 init="scaled", scale=0.1, dtype=pd),
+            "bonus_u": ParamSpec((d,), ("embed",), init="zeros", dtype=jnp.float32),
+            "ln_x": ParamSpec((d,), ("embed",), init="ones", dtype=pd),
+        },
+        "channel": {
+            "mu": ParamSpec((2, d), (None, "embed"), init="zeros", dtype=pd),
+            "w_k": ParamSpec((d, ff), ("embed", "mlp"), dtype=pd),
+            "w_v": ParamSpec((ff, d), ("mlp", "embed"), dtype=pd),
+            "w_r": ParamSpec((d, d), ("embed", "heads_qkv"), dtype=pd),
+        },
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array) -> jax.Array:
+    """Token shift: previous token's features (last = carry from prefix)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _time_mix_terms(tp, x, xx, cfg: LMConfig):
+    """r/k/v/g/decay for a chunk.  x, xx (shifted) [B,S,D]."""
+    H, hd = _heads(cfg)
+    mu = tp["mu"].astype(x.dtype)
+    mix = lambda i: x + (xx - x) * mu[i]
+    r = mix(0) @ tp["w_r"].astype(x.dtype)
+    k = mix(1) @ tp["w_k"].astype(x.dtype)
+    v = mix(2) @ tp["w_v"].astype(x.dtype)
+    g = jax.nn.silu(mix(4) @ tp["w_g"].astype(x.dtype))
+    xw = mix(3).astype(jnp.float32)
+    decay_raw = tp["decay_w0"] + jnp.tanh(
+        xw @ tp["decay_a"].astype(jnp.float32)) @ tp["decay_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(decay_raw - 3.0))        # data-dependent decay (0,1)
+    shp = x.shape[:-1] + (H, hd)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp),
+            g, w.reshape(shp))
+
+
+def _wkv_step(state, inputs, u):
+    """state [B,H,hd,hd]; r/k/v/w [B,H,hd] for one step."""
+    r, k, v, w = inputs
+    kv = k[..., :, None] * v[..., None, :]                 # [B,H,hd,hd]
+    out = jnp.einsum("bhk,bhkv->bhv", r, state + u[..., :, None] * kv)
+    new_state = state * w[..., :, None] + kv
+    return new_state, out
+
+
+def time_mix(tp, x: jax.Array, cfg: LMConfig, last_x: jax.Array,
+             state: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill/train over a sequence.  Returns (out, new_last_x, new_state)."""
+    B, S, D = x.shape
+    H, hd = _heads(cfg)
+    xx = _shift(x, last_x)
+    r, k, v, g, w = _time_mix_terms(tp, x, xx, cfg)
+    u = tp["bonus_u"].reshape(H, hd)
+
+    def step(s, rkvw):
+        return _wkv_step(s, rkvw, u)
+
+    rkvw = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state, rkvw)          # outs [S,B,H,hd]
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, D).astype(x.dtype)
+    # group-norm per head approximated by RMS over features
+    out32 = out.astype(jnp.float32)
+    out = (out32 * jax.lax.rsqrt(
+        jnp.mean(jnp.square(out32), axis=-1, keepdims=True) + 1e-5)
+        * tp["ln_x"].astype(jnp.float32)).astype(x.dtype)
+    out = out * g
+    return out @ tp["w_o"].astype(x.dtype), x[:, -1, :], state
+
+
+def channel_mix(cp, x: jax.Array, last_x: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    xx = _shift(x, last_x)
+    mu = cp["mu"].astype(x.dtype)
+    xk = x + (xx - x) * mu[0]
+    xr = x + (xx - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ cp["w_k"].astype(x.dtype)))
+    r = jax.nn.sigmoid(xr @ cp["w_r"].astype(x.dtype))
+    return r * (k @ cp["w_v"].astype(x.dtype)), x[:, -1, :]
+
+
+def rwkv_block(params, x: jax.Array, cfg: LMConfig, state: Dict
+               ) -> Tuple[jax.Array, Dict]:
+    """Full RWKV6 block over a sequence chunk with carried state.
+    state = {"wkv": [B,H,hd,hd] f32, "tshift": [B,D], "cshift": [B,D]}."""
+    out_t, new_tshift, new_wkv = time_mix(params["time"], x, cfg,
+                                          state["tshift"], state["wkv"])
+    x = x + out_t
+    out_c, new_cshift = channel_mix(params["channel"], x, state["cshift"])
+    x = x + out_c
+    return x, {"wkv": new_wkv, "tshift": new_tshift, "cshift": new_cshift}
+
+
+def init_rwkv_state(cfg: LMConfig, batch: int, n_layers: int) -> Dict:
+    H, hd = _heads(cfg)
+    return {
+        "wkv": jnp.zeros((n_layers, batch, H, hd, hd), jnp.float32),
+        "tshift": jnp.zeros((n_layers, batch, cfg.d_model), cfg.adtype),
+        "cshift": jnp.zeros((n_layers, batch, cfg.d_model), cfg.adtype),
+    }

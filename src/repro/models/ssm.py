@@ -1,0 +1,112 @@
+"""Selective SSM (Mamba-style) branch for the hybrid (hymba) block.
+
+Hymba runs attention heads and SSM heads in parallel within a layer; this
+module is the SSM branch: in-proj -> depthwise conv -> selective scan
+(data-dependent dt/B/C, diagonal A) -> gated out-proj.  Training/prefill
+uses an associative scan (O(log T) depth, TPU-friendly); decode is an O(1)
+state update — which is what makes the `long_500k` cell runnable for hybrid
+archs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+from repro.models.lm_config import LMConfig
+
+
+def ssm_specs(cfg: LMConfig) -> Dict[str, ParamSpec]:
+    d, di, n = cfg.d_model, cfg.d_inner_ssm, cfg.ssm_state
+    pd = cfg.pdtype
+    return {
+        "w_in": ParamSpec((d, 2 * di), ("embed", "heads_qkv"), dtype=pd),
+        "conv": ParamSpec((cfg.ssm_conv, di), (None, "heads_qkv"),
+                          init="scaled", scale=1.0, dtype=pd),
+        "w_dt": ParamSpec((di, di), ("heads_qkv", "heads_qkv"),
+                          init="scaled", scale=0.1, dtype=pd),
+        "dt_bias": ParamSpec((di,), ("heads_qkv",), init="zeros", dtype=pd),
+        "w_bc": ParamSpec((di, 2 * n), ("heads_qkv", None), dtype=pd),
+        "a_log": ParamSpec((di, n), ("heads_qkv", None), init="zeros",
+                           dtype=jnp.float32),
+        "d_skip": ParamSpec((di,), ("heads_qkv",), init="ones", dtype=pd),
+        "w_out": ParamSpec((di, d), ("heads_qkv", "embed"), dtype=pd),
+    }
+
+
+def _conv_scan(x: jax.Array, conv_w: jax.Array) -> jax.Array:
+    """Causal depthwise conv over seq: x [B,S,di], conv_w [K,di]."""
+    K = conv_w.shape[0]
+    pads = [jnp.pad(x, ((0, 0), (K - 1 - i, i), (0, 0)))[:, :x.shape[1], :]
+            for i in range(K)]
+    out = sum(p * conv_w[K - 1 - i] for i, p in enumerate(pads))
+    return jax.nn.silu(out)
+
+
+def _selective_terms(params, xc, cfg: LMConfig):
+    """Common dt/B/C/A terms.  xc [..., di] (post-conv)."""
+    n = cfg.ssm_state
+    dt = jax.nn.softplus(xc @ params["w_dt"].astype(xc.dtype)
+                         + params["dt_bias"].astype(xc.dtype))    # [...,di]
+    bc = xc @ params["w_bc"].astype(xc.dtype)                     # [...,2n]
+    b, c = bc[..., :n], bc[..., n:]
+    a = -jnp.exp(params["a_log"])                                 # [di,n] f32
+    dt32 = dt.astype(jnp.float32)
+    a_bar = jnp.exp(dt32[..., None] * a)                          # [...,di,n]
+    bx = (dt32[..., None] * b.astype(jnp.float32)[..., None, :]
+          * xc.astype(jnp.float32)[..., None])                    # [...,di,n]
+    return a_bar, bx, c, dt
+
+
+def ssm_branch(params, x: jax.Array, cfg: LMConfig) -> jax.Array:
+    """Training/prefill: x [B,S,D] -> [B,S,D] via associative scan."""
+    di = cfg.d_inner_ssm
+    h = x @ params["w_in"].astype(x.dtype)                        # [B,S,2di]
+    xin, z = h[..., :di], h[..., di:]
+    xc = _conv_scan(xin, params["conv"].astype(x.dtype))
+    a_bar, bx, c, _ = _selective_terms(params, xc, cfg)           # [B,S,di,n]
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, hs = jax.lax.associative_scan(combine, (a_bar, bx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", hs,
+                   c.astype(jnp.float32)).astype(x.dtype)
+    y = y + params["d_skip"].astype(x.dtype) * xc
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"].astype(x.dtype)
+
+
+def ssm_decode(params, x: jax.Array, state: Dict[str, jax.Array],
+               cfg: LMConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token decode.  x [B,1,D]; state: conv window [B,K-1,di] and
+    ssm state h [B,di,n] (f32)."""
+    di = cfg.d_inner_ssm
+    hproj = x @ params["w_in"].astype(x.dtype)
+    xin, z = hproj[..., :di], hproj[..., di:]                     # [B,1,di]
+    window = jnp.concatenate([state["conv"], xin], axis=1)        # [B,K,di]
+    # prefill's causal conv puts conv[0] on the CURRENT token; window is
+    # ordered oldest->newest, so flip the taps to match
+    conv_w = params["conv"][::-1].astype(x.dtype)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, conv_w))[:, None, :]
+    a_bar, bx, c, _ = _selective_terms(params, xc, cfg)           # [B,1,di,n]
+    h_new = state["h"] * a_bar[:, 0] + bx[:, 0]                   # [B,di,n]
+    y = jnp.einsum("bdn,bn->bd", h_new,
+                   c[:, 0].astype(jnp.float32))[:, None, :].astype(x.dtype)
+    y = y + params["d_skip"].astype(x.dtype) * xc
+    y = y * jax.nn.silu(z)
+    out = y @ params["w_out"].astype(x.dtype)
+    return out, {"conv": window[:, 1:], "h": h_new}
+
+
+def init_ssm_state(cfg: LMConfig, batch: int, n_layers: int
+                   ) -> Dict[str, jax.Array]:
+    di, n, k = cfg.d_inner_ssm, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "conv": jnp.zeros((n_layers, batch, k - 1, di), cfg.adtype),
+        "h": jnp.zeros((n_layers, batch, di, n), jnp.float32),
+    }

@@ -1,0 +1,448 @@
+"""Decoder-only LM composition: all 10 assigned architectures as one module.
+
+Layers are scanned (`lax.scan` over stacked params): HLO size is O(1) in
+depth, FSDP all-gathers overlap per layer, and 126-layer models compile
+quickly.  Heterogeneous depth (kimi's dense prefix) is handled by scanning
+homogeneous SEGMENTS.  IRC mode (the paper's technique) ternary-quantizes
+every projection matmul via STE (QAT) — embeddings/router/norms stay
+digital, mirroring the paper's digital first/last layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ternary import ternary_quantize
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (ParamSpec, materialize, abstract,
+                                 logical_axes_tree, rms_norm, softcap,
+                                 sinusoidal_positions, cross_entropy_loss)
+from repro.models.lm_config import LMConfig
+
+PyTree = Any
+
+# parameter names that are crossbar-mappable projections (IRC mode)
+_IRC_PROJ_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+                   "w_in", "w_out", "w_dt", "w_bc", "w_r", "w_k", "w_v",
+                   "w_g", "w_o")
+
+
+def _stack(specs: PyTree, n: int) -> PyTree:
+    """Add a leading stacked-layer dimension to every ParamSpec."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes,
+                            init=s.init, scale=s.scale, dtype=s.dtype),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _norm_spec(cfg: LMConfig) -> ParamSpec:
+    init = "zeros" if cfg.norm_plus_one else "ones"
+    return ParamSpec((cfg.d_model,), ("embed",), init=init, dtype=cfg.pdtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str        # "dense" | "moe" | "hybrid" | "rwkv"
+    count: int
+    layer_offset: int
+
+
+class LM:
+    """Pure-functional LM: `init`, `apply` (logits), `loss`, `decode_step`."""
+
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+        self.segments = self._plan_segments()
+        # distribution state (None on single-host CPU): set via use_mesh().
+        self.mesh = None
+        self.act_overrides = None
+        self.attn_mode = None
+        self.moe_groups = 1
+
+    def use_mesh(self, mesh, act_overrides=None) -> "LM":
+        """Enable activation sharding constraints for `mesh`.
+
+        Without explicit constraints XLA's sharding propagation lets the
+        FSDP (contracting-dim) parameter sharding leak into activations:
+        tokens end up REPLICATED and features sharded, destroying data
+        parallelism (measured 16-19x per-device FLOP inflation).  The
+        residual stream is therefore pinned to batch-DP at every layer
+        boundary.  `act_overrides` remaps logical axes (e.g. sequence
+        parallelism) for perf experiments.
+
+        Attention TP mode (assigned head counts don't always divide the
+        16-way model axis — the framework picks a valid scheme per arch):
+          kv_heads : shard the KV-head dim of q/k/v        (e.g. gemma2 kv=16)
+          q_groups : shard q's per-kv group dim, KV replicated
+                     (MaxText-style GQA; llama3/qwen3 G=16)
+          kv_seq   : context parallelism — shard K/V sequence; softmax
+                     and PV contraction reduce over the model axis
+                     (phi3 40H, hymba 25H, deepseek/kimi/chameleon kv=8)
+        """
+        self.mesh = mesh
+        self.act_overrides = act_overrides
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        m = sizes.get("model", 1)
+        # MoE dispatch groups = DP shard count (group-local capacity)
+        self.moe_groups = sizes.get("pod", 1) * sizes.get("data", 1)
+        cfg = self.cfg
+        if m == 1 or cfg.block == "rwkv":
+            self.attn_mode = None
+        elif cfg.n_kv_heads % m == 0:
+            self.attn_mode = "kv_heads"
+        elif cfg.q_per_kv % m == 0:
+            self.attn_mode = "q_groups"
+        else:
+            self.attn_mode = "kv_seq"
+        return self
+
+    def _constrain(self, x: jax.Array, axes: Tuple) -> jax.Array:
+        if self.mesh is None:
+            return x
+        from repro.sharding.rules import spec_for_axes
+        spec = spec_for_axes(axes, x.shape, self.mesh, self.act_overrides)
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    def _attn_constrain(self, q, k, v):
+        """Pin the attention TP scheme chosen in use_mesh (see docstring).
+        q [B,S,KV,G,hd]; k/v [B,S,KV,hd]."""
+        if self.attn_mode is None:
+            return q, k, v
+        c = self._constrain
+        if self.attn_mode == "kv_heads":
+            q = c(q, ("act_batch", None, "act_heads", None, None))
+            k = c(k, ("act_batch", None, "act_heads", None))
+            v = c(v, ("act_batch", None, "act_heads", None))
+        elif self.attn_mode == "q_groups":
+            q = c(q, ("act_batch", None, None, "act_heads", None))
+            k = c(k, ("act_batch", None, None, None))
+            v = c(v, ("act_batch", None, None, None))
+        else:  # kv_seq: context parallelism over the KV sequence
+            q = c(q, ("act_batch", None, None, None, None))
+            k = c(k, ("act_batch", "act_seq_model", None, None))
+            v = c(v, ("act_batch", "act_seq_model", None, None))
+        return q, k, v
+
+    # ------------------------------------------------------------ structure
+    def _plan_segments(self) -> List[Segment]:
+        cfg = self.cfg
+        if cfg.block == "rwkv":
+            return [Segment("rwkv", cfg.n_layers, 0)]
+        if cfg.block == "hybrid":
+            return [Segment("hybrid", cfg.n_layers, 0)]
+        if cfg.moe:
+            segs = []
+            if cfg.n_dense_prefix:
+                segs.append(Segment("dense", cfg.n_dense_prefix, 0))
+            segs.append(Segment("moe", cfg.n_layers - cfg.n_dense_prefix,
+                                cfg.n_dense_prefix))
+            return segs
+        return [Segment("dense", cfg.n_layers, 0)]
+
+    def _layer_specs(self, kind: str) -> Dict[str, PyTree]:
+        cfg = self.cfg
+        if kind == "rwkv":
+            s = rwkv_mod.rwkv_specs(cfg)
+            s["ln1"] = _norm_spec(cfg)
+            s["ln2"] = _norm_spec(cfg)
+            return s
+        specs: Dict[str, PyTree] = {
+            "ln1": _norm_spec(cfg),
+            "ln2": _norm_spec(cfg),
+            "attn": attn_mod.attn_specs(cfg),
+        }
+        if cfg.post_norm:
+            specs["ln1_post"] = _norm_spec(cfg)
+            specs["ln2_post"] = _norm_spec(cfg)
+        if kind == "moe":
+            specs["moe"] = moe_mod.moe_specs(cfg)
+        elif kind == "hybrid":
+            specs["ssm"] = ssm_mod.ssm_specs(cfg)
+            specs["mlp"] = mlp_mod.mlp_specs(cfg)
+        else:
+            # kimi-style dense prefix uses top_k*d_ff as its dense hidden
+            ff = cfg.d_ff * cfg.top_k if cfg.moe else cfg.d_ff
+            specs["mlp"] = mlp_mod.mlp_specs(cfg, d_ff=ff)
+        return specs
+
+    def specs(self) -> Dict[str, PyTree]:
+        cfg = self.cfg
+        top: Dict[str, PyTree] = {
+            "embed": ParamSpec((cfg.vocab_size, cfg.d_model),
+                               ("vocab", "embed"), dtype=cfg.pdtype),
+            "final_norm": _norm_spec(cfg),
+        }
+        if not cfg.tie_embeddings:
+            top["unembed"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                       ("embed", "vocab"), dtype=cfg.pdtype)
+        for i, seg in enumerate(self.segments):
+            top[f"seg{i}_{seg.kind}"] = _stack(self._layer_specs(seg.kind),
+                                               seg.count)
+        return top
+
+    def init(self, key: jax.Array) -> PyTree:
+        return materialize(key, self.specs())
+
+    def abstract_params(self) -> PyTree:
+        return abstract(self.specs())
+
+    def logical_axes(self) -> PyTree:
+        return logical_axes_tree(self.specs())
+
+    # ------------------------------------------------------------ IRC mode
+    def _maybe_irc(self, params: PyTree) -> PyTree:
+        if not self.cfg.irc.enabled:
+            return params
+
+        def quantize(path, leaf):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if name in _IRC_PROJ_NAMES:
+                return ternary_quantize(leaf)
+            return leaf
+        return jax.tree_util.tree_map_with_path(quantize, params)
+
+    # ------------------------------------------------------------ blocks
+    def _layer_fwd(self, kind: str, lp: PyTree, x: jax.Array,
+                   is_global: jax.Array, positions: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+        """One layer forward (train/prefill). Returns (x, aux_loss)."""
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        if kind == "rwkv":
+            B = x.shape[0]
+            H, hd = rwkv_mod._heads(cfg)
+            st = {"wkv": jnp.zeros((B, H, hd, hd), jnp.float32),
+                  "tshift": jnp.zeros((B, cfg.d_model), x.dtype),
+                  "cshift": jnp.zeros((B, cfg.d_model), x.dtype)}
+            h, _, _ = rwkv_mod.time_mix(lp["time"],
+                                        rms_norm(x, lp["ln1"], cfg.norm_eps,
+                                                 cfg.norm_plus_one),
+                                        cfg, st["tshift"], st["wkv"])
+            x = x + h
+            h, _ = rwkv_mod.channel_mix(lp["channel"],
+                                        rms_norm(x, lp["ln2"], cfg.norm_eps,
+                                                 cfg.norm_plus_one),
+                                        st["cshift"])
+            return x + h, aux
+
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps, cfg.norm_plus_one)
+        a = attn_mod.attention(lp["attn"], h, cfg, is_global=is_global,
+                               positions=positions,
+                               constrain=self._attn_constrain,
+                               mode=self.attn_mode,
+                               out_constrain=self._constrain
+                               if self.mesh is not None else None)
+        if kind == "hybrid":
+            s = ssm_mod.ssm_branch(lp["ssm"], h, cfg)
+            a = 0.5 * (a + s)          # hymba: parallel attn+SSM head fusion
+        if cfg.post_norm:
+            a = rms_norm(a, lp["ln1_post"], cfg.norm_eps, cfg.norm_plus_one)
+        x = x + a
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps, cfg.norm_plus_one)
+        if kind == "moe":
+            m, moe_aux = moe_mod.moe_block(lp["moe"], h, cfg,
+                                           constrain=self._constrain,
+                                           dispatch_groups=self.moe_groups)
+            aux = aux + moe_aux["aux_loss"]
+        else:
+            m = mlp_mod.mlp(lp["mlp"], h, cfg)
+        if cfg.post_norm:
+            m = rms_norm(m, lp["ln2_post"], cfg.norm_eps, cfg.norm_plus_one)
+        return x + m, aux
+
+    # ------------------------------------------------------------ forward
+    def apply(self, params: PyTree, tokens: jax.Array, *,
+              remat: str = "block", scan_layers: bool = True
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """tokens [B,S] int32 -> (logits [B,S,V], aux metrics).
+
+        scan_layers=False unrolls the layer loop — used by the roofline cost
+        probes because XLA's cost_analysis counts a while-loop body ONCE
+        regardless of trip count (production lowering always scans)."""
+        cfg = self.cfg
+        params = self._maybe_irc(params)
+        B, S = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+        if cfg.embed_scale:
+            x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        if cfg.pos == "sinusoidal":
+            x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+
+        x = self._constrain(x, ("act_batch", "act_seq", "act_embed"))
+        aux_total = jnp.zeros((), jnp.float32)
+        for i, seg in enumerate(self.segments):
+            stacked = params[f"seg{i}_{seg.kind}"]
+            flags = jnp.asarray([cfg.layer_is_global(seg.layer_offset + l)
+                                 for l in range(seg.count)])
+
+            def body(carry, xs, _kind=seg.kind):
+                xc, aux = carry
+                lp, flag = xs
+                xc = self._constrain(xc, ("act_batch", "act_seq", "act_embed"))
+                xc, a = self._layer_fwd(_kind, lp, xc, flag, positions)
+                return (xc, aux + a), None
+
+            if remat == "block":
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+            elif remat == "dots":
+                body = jax.checkpoint(
+                    body,
+                    policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            elif remat == "names":
+                # memory-feasible middle ground: save only the TP-sharded
+                # projection outputs (q/k/v/gate/up); recompute the rest
+                body = jax.checkpoint(
+                    body,
+                    policy=jax.checkpoint_policies.save_only_these_names(
+                        "attn_q", "attn_k", "attn_v", "mlp_gate", "mlp_up"))
+            if scan_layers:
+                (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                                 (stacked, flags))
+            else:
+                for l in range(seg.count):
+                    lp = jax.tree.map(lambda a: a[l], stacked)
+                    (x, aux_total), _ = body((x, aux_total), (lp, flags[l]))
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.norm_plus_one)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T.astype(x.dtype)
+        else:
+            logits = x @ params["unembed"].astype(x.dtype)
+        logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+        logits = self._constrain(logits, ("act_batch", "act_seq", "vocab"))
+        return logits, {"moe_aux_loss": aux_total}
+
+    def loss(self, params: PyTree, batch: Dict[str, jax.Array], *,
+             remat: str = "block", scan_layers: bool = True
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, aux = self.apply(params, batch["tokens"], remat=remat,
+                                 scan_layers=scan_layers)
+        loss, metrics = cross_entropy_loss(logits, batch["labels"],
+                                           batch.get("mask"))
+        loss = loss + aux["moe_aux_loss"]
+        metrics.update(aux)
+        metrics["loss"] = loss
+        return loss, metrics
+
+    # ------------------------------------------------------------ decode
+    def init_cache(self, batch: int, s_max: int) -> PyTree:
+        cfg = self.cfg
+        cache: Dict[str, PyTree] = {"index": jnp.zeros((), jnp.int32)}
+        for i, seg in enumerate(self.segments):
+            name = f"seg{i}_{seg.kind}"
+            if seg.kind == "rwkv":
+                cache[name] = rwkv_mod.init_rwkv_state(cfg, batch, seg.count)
+            elif seg.kind == "hybrid":
+                cache[name] = {
+                    "kv": attn_mod.init_kv_cache(cfg, batch, s_max, seg.count,
+                                                 cfg.adtype),
+                    "ssm": ssm_mod.init_ssm_state(cfg, batch, seg.count),
+                }
+            else:
+                cache[name] = attn_mod.init_kv_cache(cfg, batch, s_max,
+                                                     seg.count, cfg.adtype)
+        return cache
+
+    def decode_step(self, params: PyTree, tokens: jax.Array, cache: PyTree,
+                    *, scan_layers: bool = True
+                    ) -> Tuple[jax.Array, PyTree]:
+        """tokens [B,1] -> (logits [B,1,V], updated cache)."""
+        cfg = self.cfg
+        params = self._maybe_irc(params)
+        B = tokens.shape[0]
+        idx = cache["index"]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+        if cfg.embed_scale:
+            x = x * jnp.sqrt(jnp.asarray(cfg.d_model, x.dtype))
+        if cfg.pos == "sinusoidal":
+            pos = jnp.full((B, 1), idx, jnp.int32)
+            x = x + sinusoidal_positions(pos, cfg.d_model).astype(x.dtype)
+
+        x = self._constrain(x, ("act_batch", "act_seq", "act_embed"))
+        new_cache: Dict[str, PyTree] = {"index": idx + 1}
+        for i, seg in enumerate(self.segments):
+            name = f"seg{i}_{seg.kind}"
+            stacked = params[name]
+            flags = jnp.asarray([cfg.layer_is_global(seg.layer_offset + l)
+                                 for l in range(seg.count)])
+
+            def body(xc, xs, _kind=seg.kind):
+                lp, flag, layer_cache = xs
+                xc = self._constrain(xc, ("act_batch", "act_seq", "act_embed"))
+                xc, new_lc = self._layer_decode(_kind, lp, xc, flag,
+                                                layer_cache, idx)
+                return xc, new_lc
+
+            if scan_layers:
+                x, new_lc = jax.lax.scan(body, x, (stacked, flags, cache[name]))
+            else:
+                lcs = []
+                for l in range(seg.count):
+                    lp = jax.tree.map(lambda a: a[l], stacked)
+                    lc_l = jax.tree.map(lambda a: a[l], cache[name])
+                    x, lc_new = body(x, (lp, flags[l], lc_l))
+                    lcs.append(lc_new)
+                new_lc = jax.tree.map(lambda *xs: jnp.stack(xs), *lcs)
+            new_cache[name] = new_lc
+
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps, cfg.norm_plus_one)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T.astype(x.dtype)
+        else:
+            logits = x @ params["unembed"].astype(x.dtype)
+        logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+        return logits, new_cache
+
+    def _layer_decode(self, kind: str, lp: PyTree, x: jax.Array,
+                      is_global: jax.Array, lc: PyTree, idx: jax.Array
+                      ) -> Tuple[jax.Array, PyTree]:
+        cfg = self.cfg
+        if kind == "rwkv":
+            h, ts, wkv = rwkv_mod.time_mix(
+                lp["time"], rms_norm(x, lp["ln1"], cfg.norm_eps,
+                                     cfg.norm_plus_one),
+                cfg, lc["tshift"], lc["wkv"])
+            x = x + h
+            h, cs = rwkv_mod.channel_mix(
+                lp["channel"], rms_norm(x, lp["ln2"], cfg.norm_eps,
+                                        cfg.norm_plus_one), lc["cshift"])
+            return x + h, {"wkv": wkv, "tshift": ts, "cshift": cs}
+
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps, cfg.norm_plus_one)
+        kv_cache = lc["kv"] if kind == "hybrid" else lc
+        a, new_kv = attn_mod.attention_decode(lp["attn"], h, kv_cache, cfg,
+                                              is_global=is_global,
+                                              cur_index=idx,
+                                              constrain=self._attn_constrain,
+                                              mode=self.attn_mode,
+                                              out_constrain=self._constrain
+                                              if self.mesh is not None
+                                              else None)
+        new_lc: PyTree = new_kv
+        if kind == "hybrid":
+            s, new_ssm = ssm_mod.ssm_decode(lp["ssm"], h, lc["ssm"], cfg)
+            a = 0.5 * (a + s)
+            new_lc = {"kv": new_kv, "ssm": new_ssm}
+        if cfg.post_norm:
+            a = rms_norm(a, lp["ln1_post"], cfg.norm_eps, cfg.norm_plus_one)
+        x = x + a
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps, cfg.norm_plus_one)
+        if kind == "moe":
+            m, _ = moe_mod.moe_block(lp["moe"], h, cfg,
+                                     constrain=self._constrain,
+                                     dispatch_groups=self.moe_groups)
+        else:
+            m = mlp_mod.mlp(lp["mlp"], h, cfg)
+        if cfg.post_norm:
+            m = rms_norm(m, lp["ln2_post"], cfg.norm_eps, cfg.norm_plus_one)
+        return x + m, new_lc

@@ -1,0 +1,31 @@
+"""LR schedules.  `warmup_step_decay` is the paper's detector schedule:
+warm up 1e-5 -> 1e-4 over the first 5 epochs, step down to 1e-5 / 1e-6 at
+epochs 80 / 110 (Sec. V-A), expressed in steps."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmupStepDecay:
+    base_lr: float = 1e-4
+    warmup_start: float = 1e-5
+    warmup_steps: int = 500
+    decay_points: tuple = ((8000, 1e-5), (11000, 1e-6))
+
+    def __call__(self, step):
+        return warmup_step_decay(step, self.base_lr, self.warmup_start,
+                                 self.warmup_steps, self.decay_points)
+
+
+def warmup_step_decay(step, base_lr=1e-4, warmup_start=1e-5,
+                      warmup_steps=500, decay_points=((8000, 1e-5),
+                                                      (11000, 1e-6))):
+    t = jnp.asarray(step, jnp.float32)
+    frac = jnp.clip(t / max(warmup_steps, 1), 0.0, 1.0)
+    lr = warmup_start + frac * (base_lr - warmup_start)
+    for boundary, value in decay_points:
+        lr = jnp.where(t >= boundary, value, lr)
+    return lr

@@ -1,0 +1,87 @@
+"""Batched serving engine: fixed-slot batched decode with wave scheduling.
+
+Requests are served in waves of `batch_slots`: each wave shares one batched
+KV/state cache, prompts prefill teacher-forced through `decode_step` (so
+cache semantics are identical to decode), then all slots decode together one
+token per step until EOS/max_new_tokens.  Fixed shapes = one compiled
+executable — the form a TPU serving deployment actually runs; the dry-run's
+`decode_*` cells lower exactly this step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import LM
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    prompt: List[int]
+    tokens: List[int]
+    finished: bool
+
+
+class ServeEngine:
+    def __init__(self, lm: LM, params: PyTree, *, batch_slots: int = 4,
+                 max_len: int = 128, eos_id: Optional[int] = None,
+                 temperature: float = 0.0, seed: int = 0):
+        self.lm = lm
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(lm.decode_step)
+
+    def _sample(self, logits: jax.Array) -> np.ndarray:
+        if self.temperature > 0:
+            self.key, k = jax.random.split(self.key)
+            return np.asarray(jax.random.categorical(
+                k, logits[:, -1, :] / self.temperature), np.int32)
+        return np.asarray(jnp.argmax(logits[:, -1, :], -1), np.int32)
+
+    def generate(self, prompts: List[List[int]], max_new_tokens: int = 32
+                 ) -> List[GenerationResult]:
+        results: List[Optional[GenerationResult]] = [None] * len(prompts)
+        queue = list(enumerate(prompts))
+        while queue:
+            wave = queue[:self.slots]
+            queue = queue[self.slots:]
+            cache = self.lm.init_cache(self.slots, self.max_len)
+            maxlen = max(len(p) for _, p in wave)
+            assert maxlen + max_new_tokens <= self.max_len, "cache too small"
+            toks = np.zeros((self.slots, maxlen), np.int32)
+            for s, (_, p) in enumerate(wave):
+                toks[s, maxlen - len(p):] = p      # left-pad to align ends
+            logits = None
+            for t in range(maxlen):               # teacher-forced prefill
+                logits, cache = self._decode(self.params,
+                                             jnp.asarray(toks[:, t:t + 1]),
+                                             cache)
+            out_tokens: List[List[int]] = [[] for _ in wave]
+            finished = [False] * len(wave)
+            cur = self._sample(logits)
+            for _ in range(max_new_tokens):
+                for s in range(len(wave)):
+                    if not finished[s]:
+                        out_tokens[s].append(int(cur[s]))
+                        if self.eos_id is not None and cur[s] == self.eos_id:
+                            finished[s] = True
+                if all(finished):
+                    break
+                logits, cache = self._decode(self.params,
+                                             jnp.asarray(cur[:, None]), cache)
+                cur = self._sample(logits)
+            for s, (req, p) in enumerate(wave):
+                results[req] = GenerationResult(prompt=list(p),
+                                                tokens=out_tokens[s],
+                                                finished=finished[s])
+        return [r for r in results if r is not None]

@@ -1,0 +1,138 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style), with
+divisibility fixup so every (arch x shape x mesh) cell gets a VALID
+PartitionSpec: an axis that does not divide its dimension is dropped
+(replicated) rather than crashing the lowering.
+
+Parallelism encoded here:
+  * FSDP/ZeRO-3: parameter + optimizer sharding over ("pod","data") via the
+    "embed"/"vocab-embed" rules — XLA inserts per-layer all-gathers inside
+    the layer scan (overlapping with compute).
+  * TP (Megatron col->row): "heads_qkv"/"kv_qkv"/"mlp" over "model".
+  * EP: "experts" over "model" (expert FFNs live with their experts; the
+    dispatch scatter induces the all-to-all).
+  * DP: activation batch over ("pod","data").
+  * SP: long-context decode KV caches shard the SEQUENCE dim over "model"
+    (flash-decoding style), since batch=1 cannot absorb the mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# logical axis -> preferred mesh axes (tried in order, dropped if they
+# don't divide or are already taken by an earlier dim of the same tensor)
+LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
+    "layers": (),                       # scanned; never sharded
+    "vocab": ("model",),
+    "embed": ("pod", "data"),          # FSDP axis for params
+    "heads_qkv": ("model",),
+    "kv_qkv": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    # activations / caches
+    "act_batch": ("pod", "data"),
+    "act_seq": (),
+    "act_seq_model": ("model",),        # SP for decode caches
+    "act_heads": ("model",),
+    "act_embed": (),
+}
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for_axes(axes: Sequence[Optional[str]], shape: Sequence[int],
+                  mesh: Mesh,
+                  overrides: Optional[Dict[str, Tuple[str, ...]]] = None
+                  ) -> P:
+    """Resolve logical axes to a valid PartitionSpec for `shape` on `mesh`.
+
+    Drops mesh axes that (a) don't exist on this mesh, (b) don't divide the
+    dimension, or (c) were already used by an earlier dimension.
+    """
+    rules = dict(LOGICAL_RULES)
+    if overrides:
+        rules.update(overrides)
+    sizes = _mesh_axis_sizes(mesh)
+    used: set = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        if ax is None or ax not in rules:
+            parts.append(None)
+            continue
+        chosen = []
+        prod = 1
+        for m in rules[ax]:
+            if m not in sizes or m in used:
+                continue
+            if dim % (prod * sizes[m]) == 0:
+                chosen.append(m)
+                prod *= sizes[m]
+        for m in chosen:
+            used.add(m)
+        if not chosen:
+            parts.append(None)
+        elif len(chosen) == 1:
+            parts.append(chosen[0])
+        else:
+            parts.append(tuple(chosen))
+    return P(*parts)
+
+
+def tree_pspecs(axes_tree: PyTree, shape_tree: PyTree, mesh: Mesh,
+                overrides=None) -> PyTree:
+    """Map (logical axes tree, abstract shapes tree) -> PartitionSpec tree."""
+    return jax.tree.map(
+        lambda axes, sds: spec_for_axes(axes, sds.shape, mesh, overrides),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+
+
+def tree_shardings(axes_tree: PyTree, shape_tree: PyTree, mesh: Mesh,
+                   overrides=None) -> PyTree:
+    return jax.tree.map(lambda p: NamedSharding(mesh, p),
+                        tree_pspecs(axes_tree, shape_tree, mesh, overrides),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    """[B, S] token batches: batch over every data-parallel axis present."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None), None)
+
+
+# ------------------------------------------------------------------ caches
+
+def cache_axes_tree(cache_abstract: PyTree) -> PyTree:
+    """Logical axes for a decode cache built by LM.init_cache.
+
+    KV caches [L,B,S,KV,hd]: batch over DP axes, sequence over 'model'
+    (SP / flash-decoding split — batch=1 long-context cells can't absorb
+    the mesh on batch alone; KV head counts rarely divide it).
+    SSM/RWKV states: batch over DP axes, feature dim over 'model'.
+    """
+    def leaf_axes(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        nd = leaf.ndim
+        if "index" in names:
+            return (None,) * nd
+        if nd == 5 and names[-1] in ("k", "v"):        # [L,B,S,KV,hd]
+            return ("layers", "act_batch", "act_seq_model", None, None)
+        if names[-1] == "wkv":                          # [L,B,H,hd,hd]
+            return ("layers", "act_batch", "act_heads", None, None)
+        if names[-1] == "h":                            # [L,B,di,n]
+            return ("layers", "act_batch", "heads_qkv", None)
+        if names[-1] == "conv":                         # [L,B,K-1,di]
+            return ("layers", "act_batch", None, "heads_qkv")
+        if nd == 3:                                     # shift states [L,B,D]
+            return ("layers", "act_batch", None)
+        return (None,) * nd
+
+    return jax.tree_util.tree_map_with_path(leaf_axes, cache_abstract)

@@ -1,0 +1,2 @@
+from repro.train.steps import (TrainState, make_train_step, make_eval_step,
+                               make_decode_step, abstract_train_state)

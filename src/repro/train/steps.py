@@ -1,0 +1,132 @@
+"""jit-able train / eval / decode steps shared by the trainer, the serving
+engine, and the multi-pod dry-run.
+
+`make_train_step(lm, ...)` returns a pure function
+    (state, batch) -> (state, metrics)
+with loss+grad under remat, global-norm clipping, AdamW, and the paper's LR
+schedule; everything pjit-shards via the in/out shardings the caller derives
+from `repro.sharding.rules`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import LM
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         warmup_step_decay)
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt: PyTree
+    step: jax.Array
+
+
+jax.tree_util.register_pytree_with_keys(
+    TrainState,
+    lambda s: ((("params", s.params), ("opt", s.opt), ("step", s.step)),
+               None),
+    lambda aux, c: TrainState(*c))
+
+
+def init_train_state(lm: LM, key: jax.Array) -> TrainState:
+    params = lm.init(key)
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def abstract_train_state(lm: LM) -> TrainState:
+    """ShapeDtypeStruct TrainState (no allocation) for AOT lowering."""
+    params = lm.abstract_params()
+    opt = jax.eval_shape(adamw_init, params)
+    return TrainState(params=params, opt=opt,
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def train_state_axes(lm: LM) -> TrainState:
+    """Logical-axes TrainState matching abstract_train_state (moments share
+    the param sharding; step is replicated)."""
+    axes = lm.logical_axes()
+    return TrainState(
+        params=axes,
+        opt={"m": axes, "v": axes, "step": ()},
+        step=())
+
+
+def make_train_step(lm: LM, *, opt_cfg: AdamWConfig = AdamWConfig(),
+                    lr_fn: Optional[Callable] = None, remat: str = "block",
+                    microbatch: int = 1, scan_layers: bool = True,
+                    scan_microbatches: bool = True
+                    ) -> Callable[[TrainState, Dict[str, jax.Array]],
+                                  Tuple[TrainState, Dict[str, jax.Array]]]:
+    """scan_microbatches=False unrolls the grad-accumulation loop — used by
+    the roofline cost probes (XLA cost_analysis counts a scanned microbatch
+    body once regardless of trip count)."""
+    lr_fn = lr_fn or (lambda s: warmup_step_decay(s))
+
+    def loss_fn(params, batch):
+        return lm.loss(params, batch, remat=remat, scan_layers=scan_layers)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if microbatch > 1:
+            # gradient accumulation over leading micro-slices of the batch
+            def micro(carry, mb):
+                g_acc, l_acc = carry
+                (l, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), metrics
+
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((microbatch, x.shape[0] // microbatch)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            if scan_microbatches:
+                (grads, loss_sum), metrics = jax.lax.scan(
+                    micro, (zeros, jnp.zeros((), jnp.float32)), mb_batch)
+                metrics = jax.tree.map(lambda m: m[-1], metrics)
+            else:
+                carry = (zeros, jnp.zeros((), jnp.float32))
+                for i in range(microbatch):
+                    carry, metrics = micro(
+                        carry, jax.tree.map(lambda x: x[i], mb_batch))
+                grads, loss_sum = carry
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = loss_sum / microbatch
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        lr = lr_fn(state.step)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, lr, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["lr"] = lr
+        metrics["loss"] = loss
+        new_state = TrainState(params=new_params, opt=new_opt,
+                               step=state.step + 1)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(lm: LM) -> Callable:
+    def eval_step(params, batch):
+        _, metrics = lm.loss(params, batch, remat="none")
+        return metrics
+    return eval_step
+
+
+def make_decode_step(lm: LM) -> Callable:
+    def decode_step(params, tokens, cache):
+        return lm.decode_step(params, tokens, cache)
+    return decode_step

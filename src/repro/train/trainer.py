@@ -1,0 +1,88 @@
+"""Training loop with fault-tolerance plumbing.
+
+  * resume-from-latest checkpoint (exact: stateless-seeded data pipeline)
+  * async keep-k checkpointing every `ckpt_every` steps
+  * straggler watchdog: per-step wall time is tracked; steps slower than
+    `straggler_factor` x the running median are logged — on a real fleet
+    this feeds the scheduler's hot-spare replacement signal, here it
+    surfaces CPU noise / compilation stalls
+  * metrics history is returned for tests / examples to assert on
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.train.steps import TrainState
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, train_step: Callable,
+                 batch_fn: Callable[[int], Dict],
+                 state: TrainState):
+        self.cfg = cfg
+        self.train_step = jax.jit(train_step, donate_argnums=(0,))
+        self.batch_fn = batch_fn
+        self.state = state
+        self.history: List[Dict[str, float]] = []
+        self.straggler_steps: List[int] = []
+        self.ckpt = (CheckpointManager(cfg.ckpt_dir, keep=cfg.keep_ckpts)
+                     if cfg.ckpt_dir else None)
+
+    def maybe_resume(self) -> int:
+        if self.ckpt is None:
+            return 0
+        restored, step = self.ckpt.restore_latest(
+            jax.eval_shape(lambda: self.state))
+        if restored is None:
+            return 0
+        self.state = restored
+        return int(step)
+
+    def run(self) -> List[Dict[str, float]]:
+        start = self.maybe_resume()
+        step_times: List[float] = []
+        for step in range(start, self.cfg.total_steps):
+            batch = self.batch_fn(step)
+            t0 = time.time()
+            self.state, metrics = self.train_step(self.state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            step_times.append(dt)
+            if len(step_times) > 5:
+                med = float(np.median(step_times[-50:]))
+                if dt > self.cfg.straggler_factor * med:
+                    self.straggler_steps.append(step)
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step"] = step
+            rec["step_time_s"] = dt
+            self.history.append(rec)
+            if self.cfg.log_every and step % self.cfg.log_every == 0:
+                print(f"step {step:5d} loss {rec['loss']:.4f} "
+                      f"({dt*1e3:.0f} ms)", flush=True)
+            if self.ckpt and (step + 1) % self.cfg.ckpt_every == 0:
+                self.ckpt.save_async(self.state, step + 1)
+        if self.ckpt:
+            self.ckpt.wait()
+            from repro.ckpt import latest_step
+            if latest_step(self.ckpt.directory) != self.cfg.total_steps:
+                self.ckpt.save(self.state, self.cfg.total_steps)
+        return self.history

@@ -1,0 +1,179 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step (grad) + one decode step on CPU; asserts output
+shapes and finiteness.  Full configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_config, list_archs
+from repro.configs.shapes import SHAPES, shape_applicable
+from repro.configs import yolo_irc
+from repro.core import NonidealConfig
+from repro.models import LM, IRCDetector
+
+ARCHS = list_archs()
+
+
+def _finite(x) -> bool:
+    return bool(jnp.all(jnp.isfinite(x)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_forward_and_train_step(self, arch):
+        cfg = get_config(arch, "smoke")
+        lm = LM(cfg)
+        params = lm.init(jax.random.PRNGKey(0))
+        B, S = 2, 16
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                  cfg.vocab_size)
+        logits, _ = lm.apply(params, toks, remat="none")
+        assert logits.shape == (B, S, cfg.vocab_size)
+        assert _finite(logits)
+
+        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+        loss, metrics = lm.loss(params, batch)
+        assert _finite(loss) and float(loss) > 0
+        grads = jax.grad(lambda p: lm.loss(p, batch)[0])(params)
+        gsum = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+        assert jnp.isfinite(gsum) and gsum > 0
+        # one SGD step still produces finite loss
+        new_params = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype),
+                                  params, grads)
+        loss2, _ = lm.loss(new_params, batch)
+        assert _finite(loss2)
+
+    def test_decode_step(self, arch):
+        cfg = get_config(arch, "smoke")
+        lm = LM(cfg)
+        params = lm.init(jax.random.PRNGKey(0))
+        B = 2
+        cache = lm.init_cache(B, 32)
+        tok = jax.random.randint(jax.random.PRNGKey(2), (B, 1), 0,
+                                 cfg.vocab_size)
+        for _ in range(3):
+            logits, cache = lm.decode_step(params, tok, cache)
+            assert logits.shape == (B, 1, cfg.vocab_size)
+            assert _finite(logits)
+            tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        assert int(cache["index"]) == 3
+
+    def test_decode_matches_forward(self, arch):
+        """Greedy decode logits == teacher-forced forward logits (the KV
+        cache / state path computes the same function)."""
+        cfg = get_config(arch, "smoke")
+        lm = LM(cfg)
+        params = lm.init(jax.random.PRNGKey(0))
+        B, S = 1, 5
+        toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                                  cfg.vocab_size)
+        full_logits, _ = lm.apply(params, toks, remat="none")
+        cache = lm.init_cache(B, 16)
+        step_logits = []
+        for t in range(S):
+            lg, cache = lm.decode_step(params, toks[:, t:t + 1], cache)
+            step_logits.append(lg[:, 0])
+        step_logits = jnp.stack(step_logits, axis=1)
+        # local/global masks, caches and scan order must all agree
+        assert jnp.allclose(full_logits, step_logits, atol=2e-2), (
+            float(jnp.max(jnp.abs(full_logits - step_logits))))
+
+    def test_shape_applicability(self, arch):
+        cfg = get_config(arch, "full")
+        runnable = {s: shape_applicable(cfg, spec)[0]
+                    for s, spec in SHAPES.items()}
+        assert runnable["train_4k"] and runnable["prefill_32k"] \
+            and runnable["decode_32k"]
+        if arch in ("hymba-1.5b", "rwkv6-3b"):
+            assert runnable["long_500k"]
+        else:
+            assert not runnable["long_500k"]
+
+    def test_full_config_exact_assignment(self, arch):
+        """The full config carries the exact assigned numbers."""
+        cfg = get_config(arch, "full")
+        expected = {
+            "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+            "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+            "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+            "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+            "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+            "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+            "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163840),
+            "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+            "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+            "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+        }[arch]
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == expected, (got, expected)
+
+
+class TestParamCounts:
+    """Analytic parameter counts land near the advertised model sizes."""
+
+    @pytest.mark.parametrize("arch,lo,hi", [
+        ("hymba-1.5b", 1.0e9, 2.2e9),
+        ("phi3-medium-14b", 11e9, 17e9),
+        ("deepseek-67b", 60e9, 74e9),
+        ("gemma2-27b", 22e9, 32e9),
+        ("llama3-405b", 380e9, 430e9),
+        ("qwen3-moe-235b-a22b", 200e9, 270e9),
+        ("kimi-k2-1t-a32b", 0.85e12, 1.15e12),
+        ("musicgen-medium", 1.2e9, 2.2e9),
+        ("rwkv6-3b", 2.2e9, 3.6e9),
+        ("chameleon-34b", 30e9, 38e9),
+    ])
+    def test_param_count_band(self, arch, lo, hi):
+        cfg = get_config(arch, "full")
+        n = cfg.param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.1f}B not in [{lo/1e9},{hi/1e9}]B"
+
+    def test_moe_active_counts(self):
+        qwen = get_config("qwen3-moe-235b-a22b", "full")
+        kimi = get_config("kimi-k2-1t-a32b", "full")
+        assert 15e9 <= qwen.active_param_count() <= 30e9     # ~22B active
+        assert 25e9 <= kimi.active_param_count() <= 42e9     # ~32B active
+
+
+class TestDetectorSmoke:
+    @pytest.mark.parametrize("scheme", ["ternary", "binary"])
+    def test_train_and_eval(self, scheme):
+        cfg = yolo_irc.smoke(scheme)
+        det = IRCDetector(cfg)
+        params = det.init(jax.random.PRNGKey(0))
+        img = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
+        out = det.apply(params, img, mode="train", key=jax.random.PRNGKey(2))
+        gh = gw = 32 // 8   # stem /2 + 2 pools
+        assert out.shape == (2, gh, gw, cfg.n_anchors * (5 + cfg.n_classes))
+        assert _finite(out)
+        ev = det.apply(params, img, mode="eval", key=jax.random.PRNGKey(3),
+                       cfg_ni=NonidealConfig.all())
+        assert ev.shape == out.shape and _finite(ev)
+
+    def test_train_eval_consistency_ideal(self):
+        """With no nonideal effects, the structural crossbar eval computes
+        the same function as the digital train path (up to 0-current ties)."""
+        cfg = yolo_irc.smoke("ternary")
+        det = IRCDetector(cfg)
+        params = det.init(jax.random.PRNGKey(0))
+        img = jax.random.uniform(jax.random.PRNGKey(1), (1, 32, 32, 3))
+        tr = det.apply(params, img, mode="train", key=jax.random.PRNGKey(2))
+        ev = det.apply(params, img, mode="eval", key=jax.random.PRNGKey(2))
+        # head outputs are smooth functions of the binary feature maps;
+        # exact agreement of the features implies close head outputs
+        rel = float(jnp.max(jnp.abs(tr - ev)) /
+                    (jnp.max(jnp.abs(tr)) + 1e-9))
+        assert rel < 0.35, rel
+
+    def test_paper_mapping_arithmetic(self):
+        """One group channel needs 540 conv cells + bias; with BN the
+        baseline needs 540+96=636 <= 1024 rows (paper Sec. IV-A)."""
+        from repro.core import DEFAULT_MACRO
+        cfg = yolo_irc.baseline()
+        fan_in = 3 * 3 * cfg.group
+        assert fan_in == 540
+        assert fan_in + DEFAULT_MACRO.bn_rows == 636
+        rt, ct = DEFAULT_MACRO.macro_grid(fan_in, cfg.group,
+                                          DEFAULT_MACRO.bn_rows)
+        assert rt == 1   # fits one macro's rows — single-shot is possible

@@ -1,0 +1,142 @@
+"""Detection loss + mAP evaluation tests, and the IRC-mode LM integration
+(the paper's technique as a first-class feature on the assigned archs)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data.detection import (SyntheticDetectionData, yolo_targets,
+                                  render_batch, ANCHORS)
+from repro.models import LM
+from repro.models.lm_config import IRCMode
+from repro.train.det_loss import yolo_loss, evaluate_map, _iou, _nms
+
+
+class TestYoloLoss:
+    def test_loss_finite_and_grad(self):
+        d = SyntheticDetectionData(img_hw=(32, 32), stride=8)
+        b = d.batch_for_step(0, batch=2)
+        pred = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 4, 5 * 8))
+        loss, parts = yolo_loss(pred, b.targets, 5, 3)
+        assert jnp.isfinite(loss) and float(loss) > 0
+        g = jax.grad(lambda p: yolo_loss(p, b.targets, 5, 3)[0])(pred)
+        assert float(jnp.sum(jnp.abs(g))) > 0
+
+    def test_perfect_prediction_low_loss(self):
+        """Head values constructed FROM the targets give near-zero loss."""
+        d = SyntheticDetectionData(img_hw=(32, 32), stride=8)
+        b = d.batch_for_step(0, batch=2)
+        obj = np.asarray(b.targets["obj"])
+        xywh = np.asarray(b.targets["txywh"])
+        cls = np.asarray(b.targets["cls"])
+        B, gh, gw, A = obj.shape
+        pred = np.zeros((B, gh, gw, A, 8), np.float32)
+        eps = 1e-4
+        txy = np.clip(xywh[..., 0:2], eps, 1 - eps)
+        pred[..., 0:2] = np.log(txy / (1 - txy))             # sigmoid^-1
+        pred[..., 2:4] = np.log(np.maximum(xywh[..., 2:4], eps)
+                                / ANCHORS[:A])
+        pred[..., 4] = np.where(obj > 0, 10.0, -10.0)
+        for idx in np.argwhere(obj > 0):
+            pred[tuple(idx)][5 + cls[tuple(idx)]] = 10.0
+        loss, _ = yolo_loss(jnp.asarray(pred.reshape(B, gh, gw, -1)),
+                            b.targets, A, 3)
+        assert float(loss) < 0.5, float(loss)
+
+    def test_iou_identity(self):
+        a = np.array([[0.5, 0.5, 0.2, 0.2]], np.float32)
+        assert _iou(a, a)[0, 0] == pytest.approx(1.0)
+        b = np.array([[0.9, 0.9, 0.05, 0.05]], np.float32)
+        assert _iou(a, b)[0, 0] == pytest.approx(0.0)
+
+    def test_nms_removes_overlaps(self):
+        boxes = np.array([[0.5, 0.5, 0.2, 0.2], [0.51, 0.5, 0.2, 0.2],
+                          [0.1, 0.1, 0.1, 0.1]], np.float32)
+        keep = _nms(boxes, np.array([0.9, 0.8, 0.7]), thresh=0.45)
+        assert 0 in keep and 2 in keep and 1 not in keep
+
+    def test_map_perfect_predictions(self):
+        """mAP of oracle head values ~ 1."""
+        d = SyntheticDetectionData(img_hw=(32, 32), stride=8)
+        b = d.batch_for_step(0, batch=4)
+        obj = np.asarray(b.targets["obj"])
+        xywh = np.asarray(b.targets["txywh"])
+        cls = np.asarray(b.targets["cls"])
+        B, gh, gw, A = obj.shape
+        pred = np.full((B, gh, gw, A, 8), -10.0, np.float32)
+        eps = 1e-4
+        txy = np.clip(xywh[..., 0:2], eps, 1 - eps)
+        pred[..., 0:2] = np.log(txy / (1 - txy))
+        pred[..., 2:4] = np.log(np.maximum(xywh[..., 2:4], eps)
+                                / ANCHORS[:A])
+        pred[..., 4] = np.where(obj > 0, 10.0, -10.0)
+        for idx in np.argwhere(obj > 0):
+            pred[tuple(idx)][5 + cls[tuple(idx)]] = 10.0
+        m = evaluate_map(pred.reshape(B, gh, gw, -1), b.boxes, b.classes,
+                         A, 3)
+        assert m > 0.85, m
+
+    def test_map_random_predictions_low(self):
+        d = SyntheticDetectionData(img_hw=(32, 32), stride=8)
+        b = d.batch_for_step(0, batch=4)
+        pred = np.asarray(jax.random.normal(jax.random.PRNGKey(1),
+                                            (4, 4, 4, 40)))
+        m = evaluate_map(pred, b.boxes, b.classes, 5, 3)
+        assert m < 0.4
+
+
+class TestIRCModeLM:
+    """The paper's technique as a first-class LM feature."""
+
+    def test_irc_mode_quantizes_projections(self):
+        cfg = get_config("hymba-1.5b", "smoke")
+        cfg = dataclasses.replace(cfg, irc=IRCMode(enabled=True))
+        lm = LM(cfg)
+        params = lm.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                  cfg.vocab_size)
+        logits, _ = lm.apply(params, toks, remat="none")
+        assert jnp.all(jnp.isfinite(logits))
+        # gradient still flows into the latent projections (STE)
+        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+        g = jax.grad(lambda p: lm.loss(p, batch)[0])(params)
+        wq_grad = g["seg0_hybrid"]["attn"]["wq"]
+        assert float(jnp.sum(jnp.abs(wq_grad))) > 0
+
+    def test_irc_training_reduces_loss(self):
+        cfg = get_config("phi3-medium-14b", "smoke")
+        cfg = dataclasses.replace(cfg, irc=IRCMode(enabled=True))
+        lm = LM(cfg)
+        from repro.data import SyntheticLMData
+        from repro.optim import adamw_init, adamw_update
+        data = SyntheticLMData(vocab_size=cfg.vocab_size, seq_len=32,
+                               global_batch=8)
+        params = lm.init(jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+
+        @jax.jit
+        def step(params, opt, batch):
+            (l, _), g = jax.value_and_grad(lm.loss, has_aux=True)(params, batch)
+            params, opt, _ = adamw_update(g, opt, params, jnp.float32(5e-3))
+            return params, opt, l
+
+        losses = []
+        for s in range(30):
+            params, opt, l = step(params, opt, data.batch_for_step(s))
+            losses.append(float(l))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
+
+    def test_irc_weights_are_ternary_at_use(self):
+        cfg = get_config("phi3-medium-14b", "smoke")
+        cfg = dataclasses.replace(cfg, irc=IRCMode(enabled=True))
+        lm = LM(cfg)
+        params = lm.init(jax.random.PRNGKey(0))
+        q = lm._maybe_irc(params)
+        w = np.asarray(q["seg0_dense"]["mlp"]["w_up"])
+        assert set(np.unique(w)) <= {-1.0, 0.0, 1.0}
+        # embeddings stay digital (paper: first/last layers digital)
+        emb = np.asarray(q["embed"])
+        assert len(np.unique(emb)) > 3

@@ -1,0 +1,113 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DEFAULT_MACRO, NonidealConfig, ternary_quantize,
+                        ternary_fractions, ternary_planes, crossbar_forward,
+                        ideal_ternary_matmul, ir_drop_factors,
+                        nonlinearity_ratio, binary_activation)
+from repro.ckpt import save_pytree, restore_pytree
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(64, 2048), seed=st.integers(0, 2**16))
+def test_ternary_quantize_idempotent_and_regulated(n, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    wt = ternary_quantize(w)
+    wt2 = ternary_quantize(wt * 3.0)   # re-quantizing scaled ternary keeps signs
+    np.testing.assert_array_equal(np.sign(np.asarray(wt)),
+                                  np.sign(np.asarray(wt2)))
+    f = np.asarray(ternary_fractions(wt))
+    assert abs(f[0] - 0.2) < 0.05 and abs(f[2] - 0.2) < 0.05
+
+
+@settings(max_examples=15, deadline=None)
+@given(fan_in=st.integers(16, 600), n_out=st.integers(1, 40),
+       seed=st.integers(0, 2**16))
+def test_planes_recover_weights(fan_in, n_out, seed):
+    """g_pos - g_neg == ternary weights (mapping is information-preserving)."""
+    w = ternary_quantize(jax.random.normal(jax.random.PRNGKey(seed),
+                                           (fan_in, n_out)))
+    m = ternary_planes(w)
+    np.testing.assert_array_equal(np.asarray(m.g_pos - m.g_neg),
+                                  np.asarray(w))
+
+
+@settings(max_examples=10, deadline=None)
+@given(fan_in=st.integers(32, 500), n_out=st.integers(1, 24),
+       bias=st.integers(0, 32), seed=st.integers(0, 2**16))
+def test_bias_rows_never_change_ideal_sign(fan_in, n_out, bias, seed):
+    """Common-mode bias rows are differential-invariant (Sec. IV-B.4)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w = ternary_quantize(jax.random.normal(k1, (fan_in, n_out)))
+    x = (jax.random.uniform(k2, (4, fan_in)) > 0.5).astype(jnp.float32)
+    d0 = crossbar_forward(jax.random.PRNGKey(0), x, ternary_planes(w, 0),
+                          output="diff")
+    db = crossbar_forward(jax.random.PRNGKey(0), x, ternary_planes(w, bias),
+                          output="diff")
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(db), atol=0.05)
+
+
+@settings(max_examples=15, deadline=None)
+@given(nb=st.integers(1, 32), scale=st.floats(0.0, 40.0),
+       seed=st.integers(0, 2**16))
+def test_ir_drop_factors_bounded_and_monotone(nb, scale, seed):
+    blocks = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed),
+                                       (nb,))) * scale
+    f = ir_drop_factors(blocks, DEFAULT_MACRO.ir_alpha)
+    fa = np.asarray(f)
+    assert (fa >= 0).all() and (fa <= 1).all()
+    assert (np.diff(fa) <= 1e-6).all()   # farther from driver -> more drop
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.floats(0.5, 320.0))
+def test_nonlinearity_ratio_positive_bounded(p):
+    r = float(nonlinearity_ratio(jnp.array(p)))
+    assert 0.0 < r <= 2.5  # fit stays physical on its domain
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_binary_activation_is_binary_and_monotone(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (100,)) * 3
+    y = np.asarray(binary_activation(x))
+    assert set(np.unique(y)) <= {0.0, 1.0}
+    order = np.argsort(np.asarray(x))
+    assert (np.diff(y[order]) >= 0).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16), step=st.integers(0, 10**6))
+def test_checkpoint_roundtrip_property(seed, step):
+    import tempfile
+    k = jax.random.PRNGKey(seed)
+    tree = {"a": jax.random.normal(k, (3, 5)),
+            "b": {"c": jax.random.normal(k, (7,)).astype(jnp.bfloat16),
+                  "d": jnp.asarray(step, jnp.int32)}}
+    with tempfile.TemporaryDirectory() as d:
+        save_pytree(tree, d, step=step)
+        out = restore_pytree(jax.eval_shape(lambda: tree), d)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_structural_sim_effects_only_flip_small_margins(seed):
+    """Under ALL nonideal effects, outputs with LARGE ideal margins are
+    stable — the paper's core robustness argument (LLN + single-shot).
+    Margin 40 units ≈ 4σ of the accumulated device+SA noise at this fan-in;
+    the check needs enough qualifying samples to be a statistic."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w = ternary_quantize(jax.random.normal(k1, (540, 32)))
+    x = (jax.random.uniform(k2, (64, 540)) > 0.5).astype(jnp.float32)
+    ref = ideal_ternary_matmul(x, w)
+    out = crossbar_forward(jax.random.PRNGKey(1), x, ternary_planes(w, 32),
+                           cfg=NonidealConfig.all())
+    big = jnp.abs(ref) > 40.0
+    if int(jnp.sum(big)) >= 20:
+        agree = float(jnp.mean((out > 0.5) == (ref > 0), where=big))
+        assert agree > 0.85, (agree, int(jnp.sum(big)))

@@ -1,0 +1,182 @@
+"""Training stack tests: optimizer, schedules, data determinism, trainer
+loop with checkpoint/restart (fault tolerance), serving engine."""
+import shutil
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data import SyntheticLMData
+from repro.data.detection import SyntheticDetectionData
+from repro.models import LM
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         warmup_step_decay, global_norm)
+from repro.serve import ServeEngine
+from repro.train import TrainState, make_train_step
+from repro.train.steps import init_train_state
+from repro.train.trainer import Trainer, TrainerConfig
+from repro.ckpt import CheckpointManager, save_pytree, restore_pytree, latest_step
+
+
+class TestAdamW:
+    def test_reduces_quadratic(self):
+        params = {"w": jnp.ones((8,)) * 5.0}
+        state = adamw_init(params)
+        cfg = AdamWConfig(weight_decay=0.0)
+        for _ in range(200):
+            grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            params, state, _ = adamw_update(grads, state, params,
+                                            jnp.float32(0.05), cfg)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 0.5
+
+    def test_weight_decay_decoupled(self):
+        params = {"w": jnp.ones((4,))}
+        state = adamw_init(params)
+        grads = {"w": jnp.zeros((4,))}
+        cfg = AdamWConfig(weight_decay=0.1, grad_clip=0.0)
+        params, _, _ = adamw_update(grads, state, params, jnp.float32(0.1), cfg)
+        np.testing.assert_allclose(np.asarray(params["w"]), 0.99, rtol=1e-5)
+
+    def test_grad_clip(self):
+        grads = {"w": jnp.ones((100,)) * 10}
+        assert float(global_norm(grads)) == pytest.approx(100.0)
+
+    def test_bf16_params_f32_moments(self):
+        params = {"w": jnp.ones((4,), jnp.bfloat16)}
+        state = adamw_init(params)
+        assert state["m"]["w"].dtype == jnp.float32
+        grads = {"w": jnp.ones((4,), jnp.bfloat16)}
+        new_p, new_s, _ = adamw_update(grads, state, params, jnp.float32(0.01))
+        assert new_p["w"].dtype == jnp.bfloat16
+        assert new_s["v"]["w"].dtype == jnp.float32
+
+
+class TestSchedule:
+    def test_paper_schedule_shape(self):
+        # warmup 1e-5 -> 1e-4, then steps at the decay points
+        assert float(warmup_step_decay(0)) == pytest.approx(1e-5)
+        assert float(warmup_step_decay(500)) == pytest.approx(1e-4)
+        assert float(warmup_step_decay(9000)) == pytest.approx(1e-5)
+        assert float(warmup_step_decay(12000)) == pytest.approx(1e-6)
+
+
+class TestData:
+    def test_deterministic_and_restart_exact(self):
+        d = SyntheticLMData(vocab_size=128, seq_len=32, global_batch=4)
+        a = d.batch_for_step(7)
+        b = d.batch_for_step(7)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+        c = d.batch_for_step(8)
+        assert not np.array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(c["tokens"]))
+
+    def test_labels_are_shifted_stream(self):
+        d = SyntheticLMData(vocab_size=128, seq_len=32, global_batch=2)
+        b = d.batch_for_step(0)
+        assert b["tokens"].shape == (2, 32) and b["labels"].shape == (2, 32)
+
+    def test_host_sharding_disjoint(self):
+        d = SyntheticLMData(vocab_size=128, seq_len=16, global_batch=8)
+        h0 = d.batch_for_step(3, host_id=0, n_hosts=2)
+        h1 = d.batch_for_step(3, host_id=1, n_hosts=2)
+        assert h0["tokens"].shape == (4, 16)
+        assert not np.array_equal(np.asarray(h0["tokens"]),
+                                  np.asarray(h1["tokens"]))
+
+    def test_detection_targets_consistent(self):
+        d = SyntheticDetectionData(img_hw=(32, 32), stride=8)
+        batch = d.batch_for_step(0, batch=2)
+        assert batch.images.shape == (2, 32, 32, 3)
+        assert batch.targets["obj"].shape == (2, 4, 4, 5)
+        assert float(jnp.sum(batch.targets["obj"])) >= 1
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(5.0), "b": {"c": jnp.ones((2, 3), jnp.bfloat16)}}
+        save_pytree(tree, tmp_path, step=3)
+        assert latest_step(tmp_path) == 3
+        out = restore_pytree(jax.eval_shape(lambda: tree), tmp_path)
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(tree["a"]))
+        assert out["b"]["c"].dtype == jnp.bfloat16
+
+    def test_atomic_no_partial_visible(self, tmp_path):
+        # a .tmp directory must never be picked up by latest_step
+        (tmp_path / "step_000000009.tmp").mkdir(parents=True)
+        assert latest_step(tmp_path) is None
+
+    def test_keep_k_gc(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=2)
+        tree = {"w": jnp.zeros(3)}
+        for s in (1, 2, 3, 4):
+            mgr.save(tree, s)
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in tmp_path.iterdir() if p.is_dir())
+        assert steps == [3, 4]
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=3)
+        mgr.save_async({"w": jnp.ones(4)}, 1)
+        mgr.wait()
+        assert latest_step(tmp_path) == 1
+
+
+class TestTrainerEndToEnd:
+    def _setup(self, tmp_path, total_steps=6):
+        cfg = get_config("phi3-medium-14b", "smoke")
+        lm = LM(cfg)
+        data = SyntheticLMData(vocab_size=cfg.vocab_size, seq_len=16,
+                               global_batch=4)
+        state = init_train_state(lm, jax.random.PRNGKey(0))
+        step_fn = make_train_step(lm, remat="none",
+                                  lr_fn=lambda s: jnp.float32(3e-3))
+        tcfg = TrainerConfig(total_steps=total_steps, ckpt_every=3,
+                             ckpt_dir=str(tmp_path), log_every=0)
+        return Trainer(tcfg, step_fn, lambda s: data.batch_for_step(s), state)
+
+    def test_loss_decreases(self, tmp_path):
+        tr = self._setup(tmp_path, total_steps=30)
+        hist = tr.run()
+        first = np.mean([h["loss"] for h in hist[:5]])
+        last = np.mean([h["loss"] for h in hist[-5:]])
+        assert last < first, (first, last)
+
+    def test_restart_resumes_from_checkpoint(self, tmp_path):
+        tr = self._setup(tmp_path, total_steps=6)
+        tr.run()
+        assert latest_step(tmp_path) == 6
+        # "node failure": new trainer process resumes at step 6 and
+        # continues to 9 without replaying steps
+        tr2 = self._setup(tmp_path, total_steps=9)
+        hist2 = tr2.run()
+        assert hist2[0]["step"] == 6
+        assert len(hist2) == 3
+
+
+class TestServeEngine:
+    def test_batched_generation(self):
+        cfg = get_config("phi3-medium-14b", "smoke")
+        lm = LM(cfg)
+        params = lm.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(lm, params, batch_slots=2, max_len=32)
+        prompts = [[1, 2, 3], [4, 5], [6]]
+        out = eng.generate(prompts, max_new_tokens=4)
+        assert len(out) == 3
+        for r in out:
+            assert len(r.tokens) == 4
+            assert all(0 <= t < cfg.vocab_size for t in r.tokens)
+
+    def test_greedy_deterministic(self):
+        cfg = get_config("phi3-medium-14b", "smoke")
+        lm = LM(cfg)
+        params = lm.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(lm, params, batch_slots=1, max_len=32)
+        a = eng.generate([[1, 2, 3]], max_new_tokens=5)[0].tokens
+        b = eng.generate([[1, 2, 3]], max_new_tokens=5)[0].tokens
+        assert a == b
