@@ -14,9 +14,10 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from benchmarks import paper_tables, kernel_bench
+    from benchmarks import paper_tables, kernel_bench, mc_bench
 
-    benches = list(paper_tables.ALL) + list(kernel_bench.ALL)
+    benches = (list(paper_tables.ALL) + list(kernel_bench.ALL)
+               + list(mc_bench.ALL))
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = 0

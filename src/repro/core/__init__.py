@@ -20,7 +20,8 @@ from repro.core.ternary import (ternary_quantize, binary_quantize,
                                 ternary_fractions, distribution_regularizer)
 from repro.core.mapping import (MappedLayer, ternary_planes, binary_planes,
                                 extend_inputs, tile_rows, fold_bn_to_bias_units)
-from repro.core.crossbar import (crossbar_forward, irc_linear_train,
+from repro.core.crossbar import (crossbar_forward, crossbar_apply,
+                                 sample_chip_planes, irc_linear_train,
                                  IRCLinear, IRCLinearConfig,
                                  ideal_ternary_matmul, variation_noise_std)
 from repro.core.calibration import calibrate_bias, sa_error_rates, layer_current_stats

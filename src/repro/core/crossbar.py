@@ -61,9 +61,7 @@ def _accumulate(blocks: jax.Array, counts: jax.Array, cfg: ni.NonidealConfig,
     Returns (bit-line current [..., N], activated LRS count [..., N]).
     """
     if cfg.ir_drop:
-        factors = ni.ir_drop_factors(
-            jnp.moveaxis(blocks, -2, -1), spec.ir_alpha)      # [..., N, nb]
-        blocks = blocks * jnp.moveaxis(factors, -1, -2)
+        blocks = blocks * ni.ir_drop_factors(blocks, spec.ir_alpha, axis=-2)
     p_total = jnp.sum(counts, axis=-2)
     if accumulation == "single_shot":
         i_line = jnp.sum(blocks, axis=-2)
@@ -90,44 +88,54 @@ def _accumulate(blocks: jax.Array, counts: jax.Array, cfg: ni.NonidealConfig,
     return i_line, p_total
 
 
-def crossbar_forward(key: jax.Array, x_bits: jax.Array, mapped: MappedLayer,
-                     *, cfg: ni.NonidealConfig = ni.NonidealConfig.none(),
-                     spec: MacroSpec = DEFAULT_MACRO,
-                     accumulation: str = "single_shot",
-                     partial_rows: int = 256,
-                     sa_extra_units: float = 0.0,
-                     output: str = "binary") -> jax.Array:
-    """Full structural crossbar simulation.
+def sample_chip_planes(key: jax.Array, g_pos: jax.Array, g_neg: jax.Array,
+                       scheme: str, cfg: ni.NonidealConfig,
+                       spec: MacroSpec = DEFAULT_MACRO
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sample ONE chip instance: effective conductance planes + SA key.
 
-    x_bits: [..., fan_in] in {0,1}; returns [..., n_out]:
-      output="binary": SA decisions in {0,1}
-      output="diff":   analog current difference (for calibration / heads)
-
-    Layers wider than the macro are tiled over multiple macros by the caller
-    (see `IRCLinear`): this function simulates ONE macro's rows and asserts
-    the planes fit.
+    Programming a die is static — the device-variation masks are drawn once
+    per chip, not per MVM.  Returns (ep, en, k_sa) where ep/en carry the
+    per-cell variation and HRS leak, and k_sa seeds the (per-read) peripheral
+    stochastic terms.  Key-split discipline matches the historical
+    `crossbar_forward` exactly, so `crossbar_forward(key, ...)` ==
+    `crossbar_apply(k_sa, ..., *sample_chip_planes(key, ...)[:2])`.
     """
-    assert mapped.rows <= spec.rows, (
-        f"planes ({mapped.rows} rows) exceed the macro ({spec.rows}); tile first")
     k_var_p, k_var_n, k_sa = jax.random.split(key, 3)
-    x_ext = extend_inputs(x_bits.astype(jnp.float32), mapped)
-    gp, gn = mapped.g_pos, mapped.g_neg
-
-    ep, en = gp, gn
+    ep, en = g_pos, g_neg
     if cfg.device_variation:
         sig = spec.sigma_lrs
-        ep = gp * ni.sample_variation_mask(k_var_p, gp.shape, sig)
-        if mapped.scheme == "binary":
+        ep = g_pos * ni.sample_variation_mask(k_var_p, g_pos.shape, sig)
+        if scheme == "binary":
             # ONE shared physical reference line: its per-cell variation is
             # common to every output channel (input-dependent common offset,
             # Sec. IV-B.1)
-            en = gn * ni.sample_variation_mask(k_var_n, (gn.shape[0], 1), sig)
+            en = g_neg * ni.sample_variation_mask(k_var_n, (g_neg.shape[0], 1),
+                                                  sig)
         else:
-            en = gn * ni.sample_variation_mask(k_var_n, gn.shape, sig)
+            en = g_neg * ni.sample_variation_mask(k_var_n, g_neg.shape, sig)
     if spec.hrs_leak:
-        ep = ep + (1.0 - gp) * spec.hrs_leak
-        en = en + (1.0 - gn) * spec.hrs_leak
+        ep = ep + (1.0 - g_pos) * spec.hrs_leak
+        en = en + (1.0 - g_neg) * spec.hrs_leak
+    return ep, en, k_sa
 
+
+def crossbar_apply(k_sa: jax.Array, x_ext: jax.Array,
+                   ep: jax.Array, en: jax.Array,
+                   gp: jax.Array, gn: jax.Array, *,
+                   cfg: ni.NonidealConfig = ni.NonidealConfig.none(),
+                   spec: MacroSpec = DEFAULT_MACRO,
+                   accumulation: str = "single_shot",
+                   partial_rows: int = 256,
+                   sa_extra_units: float = 0.0,
+                   output: str = "binary") -> jax.Array:
+    """Deterministic-given-key forward through ONE sampled chip.
+
+    x_ext: [..., rows] word-line bits with always-on rows already prefixed;
+    ep/en: effective conductances (variation/leak applied); gp/gn: binary LRS
+    placement planes (ideal counts).  This is the function `repro.mc` vmaps
+    over a leading chips axis — all chip identity lives in (k_sa, ep, en).
+    """
     blk = spec.ir_block
     i_pos, p_pos = _accumulate(_block_reduce(x_ext, ep, blk),
                                _block_reduce(x_ext, gp, blk),
@@ -135,11 +143,39 @@ def crossbar_forward(key: jax.Array, x_bits: jax.Array, mapped: MappedLayer,
     i_neg, p_neg = _accumulate(_block_reduce(x_ext, en, blk),
                                _block_reduce(x_ext, gn, blk),
                                cfg, spec, accumulation, partial_rows)
-
     if output == "diff":
         return i_pos - i_neg
     p_pair = p_pos + p_neg
     return ni.resolve_sa(k_sa, i_pos, i_neg, p_pair, cfg, spec, sa_extra_units)
+
+
+def crossbar_forward(key: jax.Array, x_bits: jax.Array, mapped: MappedLayer,
+                     *, cfg: ni.NonidealConfig = ni.NonidealConfig.none(),
+                     spec: MacroSpec = DEFAULT_MACRO,
+                     accumulation: str = "single_shot",
+                     partial_rows: int = 256,
+                     sa_extra_units: float = 0.0,
+                     output: str = "binary") -> jax.Array:
+    """Full structural crossbar simulation (sample one chip, then run it).
+
+    x_bits: [..., fan_in] in {0,1}; returns [..., n_out]:
+      output="binary": SA decisions in {0,1}
+      output="diff":   analog current difference (for calibration / heads)
+
+    Layers wider than the macro are tiled over multiple macros by the caller
+    (see `IRCLinear`): this function simulates ONE macro's rows and asserts
+    the planes fit.  Population studies should use `repro.mc`, which samples
+    the chip state once per die and amortizes this forward over a chips axis.
+    """
+    assert mapped.rows <= spec.rows, (
+        f"planes ({mapped.rows} rows) exceed the macro ({spec.rows}); tile first")
+    ep, en, k_sa = sample_chip_planes(key, mapped.g_pos, mapped.g_neg,
+                                      mapped.scheme, cfg, spec)
+    x_ext = extend_inputs(x_bits.astype(jnp.float32), mapped)
+    return crossbar_apply(k_sa, x_ext, ep, en, mapped.g_pos, mapped.g_neg,
+                          cfg=cfg, spec=spec, accumulation=accumulation,
+                          partial_rows=partial_rows,
+                          sa_extra_units=sa_extra_units, output=output)
 
 
 # ------------------------------------------------------------------ QAT surrogate

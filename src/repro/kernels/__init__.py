@@ -1,13 +1,14 @@
 """repro.kernels — Pallas TPU kernels for the IRC hot spots.
 
   irc_mvm         fused single-shot crossbar MVM + nonideal epilogue
+  irc_mvm_chips   chip-batched grid variant: one launch per chip ensemble
   ternary_matmul  dense int8-ternary matmul (ideal digital path)
 
 Each kernel ships with a pure-jnp oracle in ref.py; on CPU the kernels run
 in interpret mode (the dispatch lives in ops.py).
 """
 from repro.kernels.ref import (IrcEpilogueParams, irc_mvm_ref,
-                               ternary_matmul_ref, nl_ratio,
-                               flash_attention_ref)
-from repro.kernels.ops import (irc_mvm, ternary_matmul, irc_mvm_from_mapped,
-                               flash_attention)
+                               irc_mvm_chips_ref, ternary_matmul_ref,
+                               nl_ratio, flash_attention_ref)
+from repro.kernels.ops import (irc_mvm, irc_mvm_chips, ternary_matmul,
+                               irc_mvm_from_mapped, flash_attention)

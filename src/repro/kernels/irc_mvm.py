@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 from repro.kernels.ref import IrcEpilogueParams, _NL_LO, _NL_HI
 
 
@@ -50,26 +52,11 @@ def _nl_ratio_inline(p: jax.Array) -> jax.Array:
     return jnp.where(p_raw < 0.5, 1.0, ratio)
 
 
-def _irc_mvm_kernel(x_ref, ep_ref, en_ref, gp_ref, gn_ref, eps_ref, rnd_ref,
-                    out_ref, blocks_p, blocks_n, p_pos, p_neg,
-                    *, params: IrcEpilogueParams, nk: int, bk: int):
-    k = pl.program_id(2)
-    blk = params.ir_block
-    nbk = bk // blk                      # IR blocks contributed this step
-
-    @pl.when(k == 0)
-    def _init():
-        blocks_p[...] = jnp.zeros_like(blocks_p)
-        blocks_n[...] = jnp.zeros_like(blocks_n)
-        p_pos[...] = jnp.zeros_like(p_pos)
-        p_neg[...] = jnp.zeros_like(p_neg)
-
-    x = x_ref[...].astype(jnp.float32)                    # (bm, bk)
+def _accum_step(x, ep, en, gp, gn, blocks_p, blocks_n, p_pos, p_neg,
+                k, nbk, blk):
+    """One R-walk step: full-tile count dots + per-IR-block partial-current
+    dots, accumulated into the VMEM scratch (shared by both kernels)."""
     bm = x.shape[0]
-    ep = ep_ref[...].astype(jnp.float32)                  # (bk, bn)
-    en = en_ref[...].astype(jnp.float32)
-    gp = gp_ref[...].astype(jnp.float32)
-    gn = gn_ref[...].astype(jnp.float32)
     bn = ep.shape[1]
 
     # activated-LRS counts: full-tile MXU dots
@@ -90,39 +77,105 @@ def _irc_mvm_kernel(x_ref, ep_ref, en_ref, gp_ref, gn_ref, eps_ref, rnd_ref,
     blocks_p[pl.ds(k * nbk, nbk)] = bdot(xb, epb)         # (nbk, bm, bn)
     blocks_n[pl.ds(k * nbk, nbk)] = bdot(xb, enb)
 
+
+def _epilogue_tile(blocks_p, blocks_n, pp, pn, eps, rnd,
+                   params: IrcEpilogueParams) -> jax.Array:
+    """Fused VPU epilogue on one (bm, bn) tile: IR-drop weighting,
+    accumulation nonlinearity, SA comparison + sensing-range fallback."""
+    def line(blocks):                                     # (NBT, bm, bn)
+        if params.apply_ir:
+            rev = blocks[::-1]
+            suffix = jnp.cumsum(rev, axis=0)[::-1]
+            cum = jnp.cumsum(suffix, axis=0) - suffix[0:1]
+            factors = jnp.clip(1.0 - params.ir_alpha * cum, 0.0, 1.0)
+            return jnp.sum(blocks * factors, axis=0)
+        return jnp.sum(blocks, axis=0)
+
+    i_pos = line(blocks_p)
+    i_neg = line(blocks_n)
+    if params.apply_nonlinearity:
+        i_pos = i_pos * _nl_ratio_inline(pp)
+        i_neg = i_neg * _nl_ratio_inline(pn)
+    diff = i_pos - i_neg
+    if params.output == "diff":
+        return diff
+    if params.apply_sa:
+        p_pair = pp + pn
+        sigma = 0.5 * (params.sa_c0 + params.sa_c1 * p_pair
+                       + params.sa_c2 * p_pair * p_pair + params.sa_extra)
+        diff = diff + sigma * eps
+    out = (diff > 0).astype(jnp.float32)
+    if params.apply_range:
+        fail = jnp.logical_or(
+            jnp.minimum(i_pos, i_neg) < params.sense_low,
+            jnp.maximum(i_pos, i_neg) > params.sense_high)
+        out = jnp.where(fail, rnd, out)
+    return out
+
+
+def _irc_mvm_kernel(x_ref, ep_ref, en_ref, gp_ref, gn_ref, eps_ref, rnd_ref,
+                    out_ref, blocks_p, blocks_n, p_pos, p_neg,
+                    *, params: IrcEpilogueParams, nk: int, bk: int):
+    k = pl.program_id(2)
+    blk = params.ir_block
+    nbk = bk // blk                      # IR blocks contributed this step
+
+    @pl.when(k == 0)
+    def _init():
+        blocks_p[...] = jnp.zeros_like(blocks_p)
+        blocks_n[...] = jnp.zeros_like(blocks_n)
+        p_pos[...] = jnp.zeros_like(p_pos)
+        p_neg[...] = jnp.zeros_like(p_neg)
+
+    _accum_step(x_ref[...].astype(jnp.float32),
+                ep_ref[...].astype(jnp.float32),
+                en_ref[...].astype(jnp.float32),
+                gp_ref[...].astype(jnp.float32),
+                gn_ref[...].astype(jnp.float32),
+                blocks_p, blocks_n, p_pos, p_neg, k, nbk, blk)
+
     @pl.when(k == nk - 1)
     def _epilogue():
-        def line(blocks):                                 # (NBT, bm, bn)
-            if params.apply_ir:
-                rev = blocks[::-1]
-                suffix = jnp.cumsum(rev, axis=0)[::-1]
-                cum = jnp.cumsum(suffix, axis=0) - suffix[0:1]
-                factors = jnp.clip(1.0 - params.ir_alpha * cum, 0.0, 1.0)
-                return jnp.sum(blocks * factors, axis=0)
-            return jnp.sum(blocks, axis=0)
+        out_ref[...] = _epilogue_tile(blocks_p[...], blocks_n[...],
+                                      p_pos[...], p_neg[...],
+                                      eps_ref[...], rnd_ref[...], params)
 
-        i_pos = line(blocks_p[...])
-        i_neg = line(blocks_n[...])
-        pp, pn = p_pos[...], p_neg[...]
-        if params.apply_nonlinearity:
-            i_pos = i_pos * _nl_ratio_inline(pp)
-            i_neg = i_neg * _nl_ratio_inline(pn)
-        diff = i_pos - i_neg
-        if params.output == "diff":
-            out_ref[...] = diff
-            return
-        if params.apply_sa:
-            p_pair = pp + pn
-            sigma = 0.5 * (params.sa_c0 + params.sa_c1 * p_pair
-                           + params.sa_c2 * p_pair * p_pair + params.sa_extra)
-            diff = diff + sigma * eps_ref[...]
-        out = (diff > 0).astype(jnp.float32)
-        if params.apply_range:
-            fail = jnp.logical_or(
-                jnp.minimum(i_pos, i_neg) < params.sense_low,
-                jnp.maximum(i_pos, i_neg) > params.sense_high)
-            out = jnp.where(fail, rnd_ref[...], out)
-        out_ref[...] = out
+
+def _irc_mvm_chips_kernel(x_ref, ep_ref, en_ref, gp_ref, gn_ref, eps_ref,
+                          rnd_ref, out_ref, blocks_p, blocks_n, p_pos, p_neg,
+                          *, params: IrcEpilogueParams, nk: int, bk: int,
+                          shared_counts: bool):
+    """Chip-batched variant: grid (chips, B/bm, N/bn, R/bk); the plane /
+    periphery refs carry a leading length-1 chip block.  The word-line tile
+    is SHARED by every chip (one ensemble evaluates one input batch), so the
+    extra grid dimension reuses the x block across the chip walk; with
+    `shared_counts` the LRS placement planes are chip-independent too and
+    arrive as plain 2-D tiles (one HBM copy serves every chip)."""
+    k = pl.program_id(3)
+    blk = params.ir_block
+    nbk = bk // blk
+
+    @pl.when(k == 0)
+    def _init():
+        blocks_p[...] = jnp.zeros_like(blocks_p)
+        blocks_n[...] = jnp.zeros_like(blocks_n)
+        p_pos[...] = jnp.zeros_like(p_pos)
+        p_neg[...] = jnp.zeros_like(p_neg)
+
+    gp = gp_ref[...] if shared_counts else gp_ref[0]
+    gn = gn_ref[...] if shared_counts else gn_ref[0]
+    _accum_step(x_ref[...].astype(jnp.float32),
+                ep_ref[0].astype(jnp.float32),
+                en_ref[0].astype(jnp.float32),
+                gp.astype(jnp.float32),
+                gn.astype(jnp.float32),
+                blocks_p, blocks_n, p_pos, p_neg, k, nbk, blk)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out_ref[0] = _epilogue_tile(blocks_p[...], blocks_n[...],
+                                    p_pos[...], p_neg[...],
+                                    eps_ref[0], rnd_ref[0], params)
 
 
 def irc_mvm_pallas(x: jax.Array, ep: jax.Array, en: jax.Array,
@@ -163,7 +216,62 @@ def irc_mvm_pallas(x: jax.Array, ep: jax.Array, en: jax.Array,
             pltpu.VMEM((bm, bn), jnp.float32),        # p_pos
             pltpu.VMEM((bm, bn), jnp.float32),        # p_neg
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, ep, en, gp, gn, eps_sa, rnd_bits)
+
+
+def irc_mvm_chips_pallas(x: jax.Array, ep: jax.Array, en: jax.Array,
+                         gp: jax.Array, gn: jax.Array,
+                         eps_sa: jax.Array, rnd_bits: jax.Array,
+                         params: IrcEpilogueParams,
+                         *, bm: int = 8, bn: int = 128, bk: int = 256,
+                         interpret: bool = False) -> jax.Array:
+    """Chip-batched raw wrapper: one launch services a whole chip ensemble.
+
+    x [B, R] is shared; ep/en [C, R, N] and eps/rnd [C, B, N] carry the
+    chips axis; gp/gn are either [C, R, N] (per-chip placement, e.g. after
+    per-die bias calibration) or [R, N] (shared placement — one HBM copy
+    serves every chip); output is [C, B, N].  The chips grid dimension is
+    outermost and fully parallel — on TPU the C x (B/bm) x (N/bn) tiles
+    schedule like one big MVM instead of C kernel launches.  Shapes must be
+    tile-aligned (use `repro.kernels.ops.irc_mvm_chips` for the padded
+    entry point).
+    """
+    B, R = x.shape
+    C, _, N = ep.shape
+    shared_counts = gp.ndim == 2
+    assert R % bk == 0 and bk % params.ir_block == 0, (R, bk, params.ir_block)
+    assert B % bm == 0 and N % bn == 0, (B, bm, N, bn)
+    nk = R // bk
+    nbt = R // params.ir_block
+
+    grid = (C, B // bm, N // bn, nk)
+    kernel = functools.partial(_irc_mvm_chips_kernel, params=params,
+                               nk=nk, bk=bk, shared_counts=shared_counts)
+    plane = pl.BlockSpec((1, bk, bn), lambda c, i, j, k: (c, k, j))
+    count = (pl.BlockSpec((bk, bn), lambda c, i, j, k: (k, j))
+             if shared_counts else plane)
+    peri = pl.BlockSpec((1, bm, bn), lambda c, i, j, k: (c, i, j))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda c, i, j, k: (i, k)),   # x (shared)
+            plane, plane, count, count,                          # ep en gp gn
+            peri, peri,                                          # eps_sa, rnd
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda c, i, j, k: (c, i, j)),
+        out_shape=jax.ShapeDtypeStruct((C, B, N), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((nbt, bm, bn), jnp.float32),   # blocks_p
+            pltpu.VMEM((nbt, bm, bn), jnp.float32),   # blocks_n
+            pltpu.VMEM((bm, bn), jnp.float32),        # p_pos
+            pltpu.VMEM((bm, bn), jnp.float32),        # p_neg
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
     )(x, ep, en, gp, gn, eps_sa, rnd_bits)

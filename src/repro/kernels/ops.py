@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ref import IrcEpilogueParams, irc_mvm_ref, ternary_matmul_ref
-from repro.kernels.irc_mvm import irc_mvm_pallas
+from repro.kernels.irc_mvm import irc_mvm_pallas, irc_mvm_chips_pallas
 from repro.kernels.ternary_matmul import ternary_matmul_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
@@ -59,6 +59,35 @@ def irc_mvm(x: jax.Array, ep: jax.Array, en: jax.Array,
     return out[:B, :N]
 
 
+@functools.partial(jax.jit, static_argnames=("params", "bm", "bn", "bk",
+                                             "interpret"))
+def irc_mvm_chips(x: jax.Array, ep: jax.Array, en: jax.Array,
+                  gp: jax.Array, gn: jax.Array,
+                  eps_sa: jax.Array, rnd_bits: jax.Array,
+                  params: IrcEpilogueParams,
+                  bm: int = 8, bn: int = 128, bk: int = 256,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Chip-batched fused IRC MVM: x [B,R] shared, effective planes [C,R,N],
+    placement planes [C,R,N] or shared [R,N], periphery noise [C,B,N]
+    -> [C,B,N] in ONE kernel launch (the `repro.mc` hot path).
+
+    Accepts arbitrary (C, B, R, N); pads B/R/N to tile multiples (padded rows
+    are zero-conductance, padded batch/cols are sliced off; the chips axis
+    needs no padding — it maps 1:1 onto the outermost grid dimension).
+    """
+    B, R = x.shape
+    C, _, N = ep.shape
+    interp = _on_cpu() if interpret is None else interpret
+    x = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    pad_plane = lambda p: _pad_to(_pad_to(p, p.ndim - 2, bk), p.ndim - 1, bn)
+    ep, en, gp, gn = map(pad_plane, (ep, en, gp, gn))
+    pad_bn = lambda p: _pad_to(_pad_to(p, 1, bm), 2, bn)
+    eps_sa, rnd_bits = map(pad_bn, (eps_sa, rnd_bits))
+    out = irc_mvm_chips_pallas(x, ep, en, gp, gn, eps_sa, rnd_bits, params,
+                               bm=bm, bn=bn, bk=bk, interpret=interp)
+    return out[:, :B, :N]
+
+
 def irc_mvm_from_mapped(key: jax.Array, x_bits: jax.Array, mapped,
                         cfg, spec, *, sa_extra_units: float = 0.0,
                         output: str = "binary",
@@ -69,22 +98,11 @@ def irc_mvm_from_mapped(key: jax.Array, x_bits: jax.Array, mapped,
     fused kernel.  Bit-exact agreement is covered by tests/test_kernels.py.
     """
     from repro.core.mapping import extend_inputs
-    from repro.core import nonideal as ni
-    k_var_p, k_var_n, k_sa = jax.random.split(key, 3)
+    from repro.core.crossbar import sample_chip_planes
+    gp, gn = mapped.g_pos, mapped.g_neg
+    ep, en, k_sa = sample_chip_planes(key, gp, gn, mapped.scheme, cfg, spec)
     k_off, k_rng = jax.random.split(k_sa)
     x_ext = extend_inputs(x_bits.astype(jnp.float32), mapped)
-    gp, gn = mapped.g_pos, mapped.g_neg
-    ep, en = gp, gn
-    if cfg.device_variation:
-        sig = spec.sigma_lrs
-        ep = gp * ni.sample_variation_mask(k_var_p, gp.shape, sig)
-        if mapped.scheme == "binary":
-            en = gn * ni.sample_variation_mask(k_var_n, (gn.shape[0], 1), sig)
-        else:
-            en = gn * ni.sample_variation_mask(k_var_n, gn.shape, sig)
-    if spec.hrs_leak:
-        ep = ep + (1.0 - gp) * spec.hrs_leak
-        en = en + (1.0 - gn) * spec.hrs_leak
     B, N = x_ext.shape[0], gp.shape[1]
     eps_sa = jax.random.normal(k_off, (B, N), jnp.float32)
     rnd = jax.random.bernoulli(k_rng, 0.5, (B, N)).astype(jnp.float32)

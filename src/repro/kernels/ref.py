@@ -122,6 +122,23 @@ def irc_mvm_ref(x: jax.Array, ep: jax.Array, en: jax.Array,
     return out
 
 
+def irc_mvm_chips_ref(x: jax.Array, ep: jax.Array, en: jax.Array,
+                      gp: jax.Array, gn: jax.Array,
+                      eps_sa: jax.Array, rnd_bits: jax.Array,
+                      params: IrcEpilogueParams) -> jax.Array:
+    """Oracle for the chip-batched kernel: vmap of `irc_mvm_ref` over the
+    leading chips axis of the planes / periphery noise, x shared.
+
+    x [B, R]; ep/en [C, R, N]; gp/gn [C, R, N] or shared [R, N];
+    eps/rnd [C, B, N] -> [C, B, N]."""
+    count_axis = None if gp.ndim == 2 else 0
+    return jax.vmap(
+        lambda ep_c, en_c, gp_c, gn_c, eps_c, rnd_c: irc_mvm_ref(
+            x, ep_c, en_c, gp_c, gn_c, eps_c, rnd_c, params),
+        in_axes=(0, 0, count_axis, count_axis, 0, 0)
+    )(ep, en, gp, gn, eps_sa, rnd_bits)
+
+
 def ternary_matmul_ref(x: jax.Array, w_t: jax.Array) -> jax.Array:
     """Ideal digital ternary matmul oracle: x [B,K] (any float), w_t [K,N]
     int8 in {-1,0,1} -> f32 [B,N]."""

@@ -1,0 +1,125 @@
+"""CLI for the chip-ensemble Monte Carlo engine (`repro.mc`).
+
+Evaluates a population of sampled chip instances of one IRC layer and prints
+Table-II-style mean±std bit-agreement columns (the mAP-drop proxy used across
+the benchmark suite), plus quantiles and throughput.
+
+  # 64-chip ensemble, all nonideal effects, proposed design
+  PYTHONPATH=src python -m repro.launch.mc --chips 64
+
+  # full Table II ablation sweep, baseline binary mapping, kernel backend
+  PYTHONPATH=src python -m repro.launch.mc --chips 128 --scheme binary \
+      --bias-rows 0 --ablation table2 --backend kernel
+
+  # per-die bias calibration + JSON report
+  PYTHONPATH=src python -m repro.launch.mc --chips 64 --calibrate \
+      --json experiments/mc_proposed.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+
+def build_layer(args):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (ternary_quantize, binary_quantize, ternary_planes,
+                            binary_planes, ideal_ternary_matmul)
+
+    k_w, k_x = jax.random.split(jax.random.PRNGKey(args.seed))
+    w_lat = jax.random.normal(k_w, (args.fan_in, args.n_out))
+    if args.scheme == "ternary":
+        w = ternary_quantize(w_lat)
+        mapped = ternary_planes(w, bias_rows=args.bias_rows)
+    else:
+        w = binary_quantize(w_lat)
+        mapped = binary_planes(w)
+    x = (jax.random.uniform(k_x, (args.batch, args.fan_in))
+         > 1.0 - args.density).astype(jnp.float32)
+    ref_bits = (ideal_ternary_matmul(x, w) > 0).astype(jnp.float32)
+    return mapped, x, ref_bits
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="chip-ensemble Monte Carlo sweep (repro.mc)")
+    ap.add_argument("--chips", type=int, default=64)
+    ap.add_argument("--chunk", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--fan-in", type=int, default=540)
+    ap.add_argument("--n-out", type=int, default=60)
+    ap.add_argument("--density", type=float, default=0.5,
+                    help="activated word-line fraction")
+    ap.add_argument("--scheme", default="ternary",
+                    choices=["ternary", "binary"])
+    ap.add_argument("--bias-rows", type=int, default=32)
+    ap.add_argument("--accumulation", default="single_shot",
+                    choices=["single_shot", "partial_sum"])
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "kernel"])
+    ap.add_argument("--ablation", default="all",
+                    help="'table2' for the full effect sweep, or one column "
+                         "name (ideal|devvar|devvar+nl|devvar+nl+peri|all)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="per-die extra-bias calibration before evaluation")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="", help="write the report here")
+    args = ap.parse_args()
+
+    import jax
+    from repro.mc import McConfig, run_mc, run_ablation, TABLE2_ABLATION
+
+    mapped, x, ref_bits = build_layer(args)
+    mc = McConfig(n_chips=args.chips, chunk_size=args.chunk,
+                  accumulation=args.accumulation, backend=args.backend,
+                  calibrate=args.calibrate)
+    key = jax.random.PRNGKey(args.seed)
+
+    if args.ablation == "table2":
+        results = run_ablation(key, mapped, x, ref_bits=ref_bits, mc=mc)
+    else:
+        by_name = dict(TABLE2_ABLATION)
+        if args.ablation not in by_name:
+            raise SystemExit(f"unknown ablation column: {args.ablation!r} "
+                             f"(choices: table2, {', '.join(by_name)})")
+        # the ideal column always runs too: drop_vs_ideal must be measured
+        # against the simulated ideal (hrs_leak + tie-breaking keep its
+        # agreement below 1), never against a literal 1.0
+        columns = [("ideal", by_name["ideal"])]
+        if args.ablation != "ideal":
+            columns.append((args.ablation, by_name[args.ablation]))
+        results = {name: run_mc(key, mapped, x, ref_bits=ref_bits,
+                                mc=dataclasses.replace(mc, cfg=cfg))
+                   for name, cfg in columns}
+
+    ideal_mean = results["ideal"].metrics["bit_agreement"]["mean"]
+    print(f"# {args.scheme} {args.fan_in}x{args.n_out} batch={args.batch} "
+          f"chips={args.chips} backend={args.backend}"
+          + (" calibrated" if args.calibrate else ""))
+    print("config,agree_mean,agree_std,drop_vs_ideal,q05,q50,q95,chips_per_s")
+    report = {"args": vars(args), "results": {}}
+    for name, res in results.items():
+        m = res.metrics["bit_agreement"]
+        drop = ideal_mean - m["mean"]
+        print(f"{name},{m['mean']:.4f},{m['std']:.4f},{drop:.4f},"
+              f"{m.get('q05', float('nan')):.4f},"
+              f"{m.get('q50', float('nan')):.4f},"
+              f"{m.get('q95', float('nan')):.4f},{res.chips_per_sec:.2f}")
+        report["results"][name] = {
+            "metrics": res.metrics, "wall_s": res.wall_s,
+            "chips_per_sec": res.chips_per_sec,
+            "per_chip_bit_agreement":
+                res.per_chip["bit_agreement"].tolist(),
+            "bias_units": (res.bias_units.tolist()
+                           if res.bias_units is not None else None)}
+    if args.json:
+        out = Path(args.json)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(report, indent=1))
+        print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""repro.mc — chip-ensemble Monte Carlo evaluation engine.
+
+The paper's reliability numbers are statistics over sampled chip instances;
+this package evaluates a population of dies as ONE array program:
+
+  ChipEnsemble / sample_ensemble   pre-sampled per-chip nonideal state with a
+                                   leading `chips` axis (fold_in key stream)
+  calibrate_ensemble_bias          per-die extra-bias calibration (Table I)
+  ensemble_apply                   vmapped structural sim over all chips
+  ensemble_apply_kernel            chip-batched fused Pallas launch
+  run_mc / run_ablation            streaming Welford/quantile sweeps
+                                   (Table II mean±std columns)
+
+CLI: `python -m repro.launch.mc`; perf: `benchmarks/mc_bench.py`.
+"""
+from repro.mc.ensemble import (ChipEnsemble, sample_ensemble, chip_keys,
+                               calibrate_ensemble_bias, shard_ensemble)
+from repro.mc.engine import (McConfig, McResult, ensemble_apply,
+                             ensemble_apply_kernel, run_mc, run_ablation,
+                             bit_agreement_metric, ones_fraction_metric,
+                             TABLE2_ABLATION)
+from repro.mc.stats import (Welford, welford_init, welford_merge,
+                            welford_add_batch, welford_finalize,
+                            StreamingMoments, DEFAULT_QUANTILES)

@@ -1,0 +1,302 @@
+"""Chip-ensemble Monte Carlo engine: one jitted computation, many chips.
+
+`ensemble_apply` vmaps the deterministic `crossbar_apply` over the ensemble's
+leading chips axis (or dispatches the chip-batched Pallas kernel), so a whole
+population of sampled dies is a single XLA program instead of a Python loop
+of structural sims.  `run_mc` streams an arbitrarily large ensemble through
+it in fixed-size chunks, folding per-chip metrics into Welford/quantile
+accumulators so memory stays bounded by `chunk_size`, and `run_ablation`
+sweeps the Table-II effect toggles to produce mean±std columns.
+
+Chunking is statistically invisible: chip `c` is keyed by `fold_in(key, c)`
+regardless of which chunk evaluates it, so `chunk_size` only trades memory
+for launch count (tests assert identical per-chip metrics across chunkings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.macro import MacroSpec, DEFAULT_MACRO
+from repro.core import nonideal as ni
+from repro.core.crossbar import crossbar_apply, _block_reduce, _accumulate
+from repro.mc.ensemble import ChipEnsemble, sample_ensemble, \
+    calibrate_ensemble_bias, shard_ensemble
+from repro.mc.stats import StreamingMoments, DEFAULT_QUANTILES
+
+
+# ------------------------------------------------------------------ forward
+
+def _extend(x_bits: jax.Array, lead_rows: int) -> jax.Array:
+    x = x_bits.astype(jnp.float32)
+    if lead_rows == 0:
+        return x
+    ones = jnp.ones(x.shape[:-1] + (lead_rows,), jnp.float32)
+    return jnp.concatenate([ones, x], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "spec", "accumulation",
+                                             "partial_rows", "sa_extra_units",
+                                             "output"))
+def ensemble_apply(ens: ChipEnsemble, x_bits: jax.Array, *,
+                   cfg: ni.NonidealConfig, spec: MacroSpec = DEFAULT_MACRO,
+                   accumulation: str = "single_shot", partial_rows: int = 256,
+                   sa_extra_units: float = 0.0,
+                   output: str = "binary") -> jax.Array:
+    """Evaluate every chip on a shared input batch: [chips, batch, n_out].
+
+    Chip `c`'s slice equals `crossbar_forward(fold_in(key, c), x, mapped, ...)`
+    bit-for-bit (same key-split discipline; tests/test_mc.py pins this).
+
+    When the LRS placement planes are shared by all chips, the activated-count
+    block dots are hoisted OUT of the chips vmap — counts are sums of {0,1}
+    products, exact in f32 at any summation order, so sharing them across the
+    ensemble halves the matmul work without changing a single output bit.
+    """
+    x_ext = _extend(x_bits, ens.lead_rows)
+    if ens.planes_per_chip():
+        fwd = lambda k, ep, en, gp, gn: crossbar_apply(
+            k, x_ext, ep, en, gp, gn, cfg=cfg, spec=spec,
+            accumulation=accumulation, partial_rows=partial_rows,
+            sa_extra_units=sa_extra_units, output=output)
+        return jax.vmap(fwd)(ens.sa_keys, ens.ep, ens.en, ens.gp, ens.gn)
+
+    blk = spec.ir_block
+    counts_p = _block_reduce(x_ext, ens.gp, blk)      # chip-independent
+    counts_n = _block_reduce(x_ext, ens.gn, blk)
+
+    def fwd(k_sa, ep, en):
+        i_pos, p_pos = _accumulate(_block_reduce(x_ext, ep, blk), counts_p,
+                                   cfg, spec, accumulation, partial_rows)
+        i_neg, p_neg = _accumulate(_block_reduce(x_ext, en, blk), counts_n,
+                                   cfg, spec, accumulation, partial_rows)
+        if output == "diff":
+            return i_pos - i_neg
+        return ni.resolve_sa(k_sa, i_pos, i_neg, p_pos + p_neg, cfg, spec,
+                             sa_extra_units)
+
+    return jax.vmap(fwd)(ens.sa_keys, ens.ep, ens.en)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "spec", "sa_extra_units",
+                                             "output", "bm", "bn", "bk"))
+def ensemble_apply_kernel(ens: ChipEnsemble, x_bits: jax.Array, *,
+                          cfg: ni.NonidealConfig,
+                          spec: MacroSpec = DEFAULT_MACRO,
+                          sa_extra_units: float = 0.0, output: str = "binary",
+                          bm: int = 8, bn: int = 128, bk: int = 256
+                          ) -> jax.Array:
+    """Chip-batched Pallas path: ONE kernel launch services all chips.
+
+    Single-shot accumulation only (the kernel's fused epilogue).  The
+    per-read stochastic terms are pre-sampled here from each chip's `sa_keys`
+    with the `irc_mvm_from_mapped` key discipline, so chip `c` matches a loop
+    of single-chip kernel calls exactly.
+    """
+    from repro.kernels.ops import irc_mvm_chips
+    from repro.kernels.ref import IrcEpilogueParams
+    x_ext = _extend(x_bits, ens.lead_rows)
+    B, N = x_ext.shape[0], ens.n_out
+
+    def periphery(k_sa):
+        k_off, k_rng = jax.random.split(k_sa)
+        return (jax.random.normal(k_off, (B, N), jnp.float32),
+                jax.random.bernoulli(k_rng, 0.5, (B, N)).astype(jnp.float32))
+
+    eps_sa, rnd = jax.vmap(periphery)(ens.sa_keys)
+    # shared placement planes pass through as [R, N]: the kernel's count
+    # BlockSpec ignores the chip coordinate, so one HBM copy serves all chips
+    gp, gn = ens.gp, ens.gn
+    params = IrcEpilogueParams.from_macro(
+        spec, sa_extra=sa_extra_units, output=output,
+        apply_nonlinearity=cfg.nonlinearity, apply_ir=cfg.ir_drop,
+        apply_sa=cfg.sa_variation, apply_range=cfg.sensing_range)
+    return irc_mvm_chips(x_ext, ens.ep, ens.en, gp, gn, eps_sa, rnd, params,
+                         bm=bm, bn=bn, bk=bk)
+
+
+# ------------------------------------------------------------------ metrics
+
+MetricFn = Callable[[jax.Array], jax.Array]   # [chips, B, N] -> [chips]
+
+
+def bit_agreement_metric(ref_bits: jax.Array) -> MetricFn:
+    """Fraction of SA decisions agreeing with the ideal digital output —
+    the accuracy/mAP-drop proxy used across the benchmark suite."""
+    ref = (ref_bits > 0.5).astype(jnp.float32)
+    return lambda out: jnp.mean((out > 0.5).astype(jnp.float32) == ref,
+                                axis=(-2, -1))
+
+
+def ones_fraction_metric() -> MetricFn:
+    return lambda out: jnp.mean(out, axis=(-2, -1))
+
+
+@functools.partial(jax.jit, static_argnames=("scheme", "fan_in", "cfg",
+                                             "spec", "accumulation",
+                                             "partial_rows", "sa_extra_units"))
+def _fused_chunk_metrics(key, ids, x_bits, gp, gn, ref_bits, *, scheme,
+                         fan_in, cfg, spec, accumulation, partial_rows,
+                         sa_extra_units):
+    """sample -> forward -> per-chip metrics as one cached jitted program
+    (module-level so repeated `run_mc` calls reuse the compilation; eager
+    per-chunk sampling and op-by-op metric reductions otherwise cost as much
+    as the forward itself on small chunks)."""
+    from repro.core.mapping import MappedLayer
+    mapped = MappedLayer(g_pos=gp, g_neg=gn,
+                         bias_rows=gp.shape[0] - fan_in, scheme=scheme,
+                         fan_in=fan_in)
+    ens = sample_ensemble(key, mapped, chip_ids=ids, cfg=cfg, spec=spec)
+    out = ensemble_apply(ens, x_bits, cfg=cfg, spec=spec,
+                         accumulation=accumulation,
+                         partial_rows=partial_rows,
+                         sa_extra_units=sa_extra_units)
+    metrics = {"ones_fraction": ones_fraction_metric()(out)}
+    if ref_bits is not None:
+        metrics["bit_agreement"] = bit_agreement_metric(ref_bits)(out)
+    return metrics
+
+
+# ------------------------------------------------------------------ MC sweep
+
+@dataclasses.dataclass(frozen=True)
+class McConfig:
+    """One ensemble sweep: population size, chunking, effect toggles."""
+    n_chips: int = 64
+    chunk_size: int = 32
+    cfg: ni.NonidealConfig = ni.NonidealConfig.all()
+    accumulation: str = "single_shot"
+    partial_rows: int = 256
+    sa_extra_units: float = 0.0
+    backend: str = "jnp"                 # "jnp" | "kernel"
+    calibrate: bool = False              # per-chip bias calibration
+    quantiles: Tuple[float, ...] = DEFAULT_QUANTILES
+
+
+@dataclasses.dataclass
+class McResult:
+    """Ensemble statistics for one sweep."""
+    n_chips: int
+    metrics: Dict[str, Dict[str, float]]      # name -> {mean,std,qXX,...}
+    per_chip: Dict[str, np.ndarray]           # name -> [n_chips]
+    wall_s: float
+    chips_per_sec: float
+    bias_units: Optional[np.ndarray] = None   # per-chip calibrated bias
+
+    def summary_line(self, metric: str = "bit_agreement") -> str:
+        m = self.metrics[metric]
+        qs = ";".join(f"{k}={v:.4f}" for k, v in sorted(m.items())
+                      if k.startswith("q"))
+        return (f"{metric}={m['mean']:.4f}±{m['std']:.4f} "
+                f"({qs}) over {self.n_chips} chips "
+                f"[{self.chips_per_sec:.1f} chips/s]")
+
+
+def run_mc(key: jax.Array, mapped, x_bits: jax.Array, *,
+           ref_bits: Optional[jax.Array] = None,
+           mc: McConfig = McConfig(), spec: MacroSpec = DEFAULT_MACRO,
+           metric_fns: Optional[Dict[str, MetricFn]] = None,
+           x_calib_bits: Optional[jax.Array] = None, mesh=None) -> McResult:
+    """Stream an ensemble of `mc.n_chips` sampled chips over `x_bits`.
+
+    Chips are sampled chunk-by-chunk (never materializing more than
+    `chunk_size` chips of [rows, n_out] planes or [chunk, B, n_out]
+    activations) and their per-chip metrics fold into streaming accumulators.
+    `ref_bits` ([B, n_out] ideal binary output) enables the default
+    `bit_agreement` metric; pass `metric_fns` for custom reductions.
+    With `mesh`, each chunk's chips axis shards over the data-parallel axes
+    (the "chips" rule) — the workload is embarrassingly parallel per chip.
+    """
+    fns: Dict[str, MetricFn] = {}
+    if ref_bits is not None:
+        fns["bit_agreement"] = bit_agreement_metric(ref_bits)
+    fns["ones_fraction"] = ones_fraction_metric()
+    if metric_fns:
+        fns.update(metric_fns)
+    moments = {name: StreamingMoments(mc.quantiles) for name in fns}
+    bias_chunks: List[np.ndarray] = []
+
+    if mc.backend == "kernel" and mc.accumulation != "single_shot":
+        raise ValueError("kernel backend fuses the single-shot path only")
+
+    # Fast path: default metrics, no calibration/sharding -> the cached
+    # fused chunk program.  Calibration (host loop), explicit sharding,
+    # custom metrics and the kernel backend keep the step-by-step path.
+    use_fused = (not mc.calibrate and mesh is None and mc.backend == "jnp"
+                 and not metric_fns)
+
+    t0 = time.perf_counter()
+    for lo in range(0, mc.n_chips, mc.chunk_size):
+        ids = jnp.arange(lo, min(lo + mc.chunk_size, mc.n_chips),
+                         dtype=jnp.uint32)
+        if use_fused:
+            vals = jax.block_until_ready(_fused_chunk_metrics(
+                key, ids, x_bits, mapped.g_pos, mapped.g_neg, ref_bits,
+                scheme=mapped.scheme, fan_in=mapped.fan_in, cfg=mc.cfg,
+                spec=spec, accumulation=mc.accumulation,
+                partial_rows=mc.partial_rows,
+                sa_extra_units=mc.sa_extra_units))
+            for name, v in vals.items():
+                moments[name].update(v)
+            continue
+        ens = sample_ensemble(key, mapped, chip_ids=ids, cfg=mc.cfg, spec=spec)
+        if mc.calibrate:
+            ens = calibrate_ensemble_bias(
+                ens, x_bits if x_calib_bits is None else x_calib_bits, spec)
+            bias_chunks.append(np.asarray(ens.bias_units))
+        if mesh is not None:
+            ens = shard_ensemble(ens, mesh)
+        if mc.backend == "kernel":
+            out = ensemble_apply_kernel(ens, x_bits, cfg=mc.cfg, spec=spec,
+                                        sa_extra_units=mc.sa_extra_units)
+        else:
+            out = ensemble_apply(ens, x_bits, cfg=mc.cfg, spec=spec,
+                                 accumulation=mc.accumulation,
+                                 partial_rows=mc.partial_rows,
+                                 sa_extra_units=mc.sa_extra_units)
+        out = jax.block_until_ready(out)
+        for name, fn in fns.items():
+            moments[name].update(fn(out))
+    wall = time.perf_counter() - t0
+
+    return McResult(
+        n_chips=mc.n_chips,
+        metrics={name: m.summary() for name, m in moments.items()},
+        per_chip={name: m.per_chip for name, m in moments.items()},
+        wall_s=wall, chips_per_sec=mc.n_chips / max(wall, 1e-9),
+        bias_units=(np.concatenate(bias_chunks) if bias_chunks else None))
+
+
+# ------------------------------------------------------------------ ablation
+
+# Table II columns: effects switch on cumulatively, plus the all-on row.
+TABLE2_ABLATION: Tuple[Tuple[str, ni.NonidealConfig], ...] = (
+    ("ideal", ni.NonidealConfig.none()),
+    ("devvar", ni.NonidealConfig(device_variation=True)),
+    ("devvar+nl", ni.NonidealConfig(device_variation=True, nonlinearity=True)),
+    ("devvar+nl+peri", ni.NonidealConfig(device_variation=True,
+                                         nonlinearity=True, sa_variation=True,
+                                         sensing_range=True)),
+    ("all", ni.NonidealConfig.all()),
+)
+
+
+def run_ablation(key: jax.Array, mapped, x_bits: jax.Array, *,
+                 ref_bits: jax.Array,
+                 ablations: Sequence[Tuple[str, ni.NonidealConfig]]
+                 = TABLE2_ABLATION,
+                 mc: McConfig = McConfig(), spec: MacroSpec = DEFAULT_MACRO
+                 ) -> Dict[str, McResult]:
+    """Per-effect ensemble sweep: one `run_mc` per Table-II column, same
+    chip key stream (each effect set resamples the same dies' variation)."""
+    results = {}
+    for name, cfg in ablations:
+        results[name] = run_mc(key, mapped, x_bits, ref_bits=ref_bits,
+                               mc=dataclasses.replace(mc, cfg=cfg), spec=spec)
+    return results

@@ -1,0 +1,192 @@
+"""ChipEnsemble — pre-sampled per-chip nonideal state with a leading chips axis.
+
+The paper's robustness claims are statistics over a *population* of dies:
+each fabricated chip freezes one draw of the log-normal device variation and
+one SA-offset realization, and mAP numbers are means over sampled chips
+(Table II / Figs. 10-12).  `ChipEnsemble` makes that population a first-class
+array program: chip `c` of `sample_ensemble(key, ...)` carries EXACTLY the
+state that `crossbar_forward(jax.random.fold_in(key, c), ...)` would sample,
+stacked as a leading `chips` axis so one vmapped/jitted computation (or one
+chip-batched Pallas launch) services the whole ensemble.
+
+Optional per-chip bias calibration (`calibrate_ensemble_bias`) reproduces the
+paper's Sec. IV-B.4 deployment flow per die: every chip's own variation draw
+yields its own bit-line current distribution, hence its own best extra-bias
+row count from `repro.core.calibration.calibrate_bias`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.macro import MacroSpec, DEFAULT_MACRO
+from repro.core import nonideal as ni
+from repro.core.mapping import MappedLayer
+from repro.core.crossbar import sample_chip_planes, _block_reduce, _accumulate
+from repro.core.calibration import calibrate_bias
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ChipEnsemble:
+    """A population of sampled chip instances for one mapped layer.
+
+    ep/en:    [chips, rows, n_out] effective conductance planes (per-cell
+              variation + HRS leak applied; chip identity lives here).
+    gp/gn:    binary LRS placement planes — [rows, n_out] when shared by all
+              chips (the common case) or [chips, rows, n_out] after per-chip
+              bias calibration masks different bias rows per die.
+    sa_keys:  [chips, 2] raw PRNG keys seeding each chip's per-read
+              peripheral noise (SA offset draws, sensing-range fallback).
+    chip_ids: [chips] global chip indices (fold_in stream positions), so a
+              chunked sweep over one logical ensemble stays deterministic.
+    bias_units: [chips] calibrated active bias rows per chip (or None).
+    """
+    ep: jax.Array
+    en: jax.Array
+    gp: jax.Array
+    gn: jax.Array
+    sa_keys: jax.Array
+    chip_ids: jax.Array
+    bias_units: Optional[jax.Array]
+    scheme: str = dataclasses.field(metadata=dict(static=True))
+    fan_in: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_chips(self) -> int:
+        return self.ep.shape[0]
+
+    @property
+    def rows(self) -> int:
+        return self.ep.shape[1]
+
+    @property
+    def n_out(self) -> int:
+        return self.ep.shape[2]
+
+    @property
+    def lead_rows(self) -> int:
+        """Always-on (bias / BN) rows prefixed ahead of the fan-in rows."""
+        return self.rows - self.fan_in
+
+    def planes_per_chip(self) -> bool:
+        return self.gp.ndim == 3
+
+
+def chip_keys(key: jax.Array, chip_ids: jax.Array) -> jax.Array:
+    """Per-chip PRNG keys: chip c <- fold_in(key, c) (the single-chip
+    convention, so ensemble chip c is bit-identical to a loop iteration c)."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(chip_ids)
+
+
+def sample_ensemble(key: jax.Array, mapped: MappedLayer, n_chips: int = 0,
+                    *, chip_ids: Optional[jax.Array] = None,
+                    cfg: ni.NonidealConfig = ni.NonidealConfig.all(),
+                    spec: MacroSpec = DEFAULT_MACRO) -> ChipEnsemble:
+    """Sample `n_chips` chip instances of one mapped layer.
+
+    Pass `chip_ids` instead of `n_chips` to sample an arbitrary slice of the
+    logical ensemble (how the streaming engine bounds memory: chunked ids,
+    one `fold_in` stream, identical chips regardless of chunking).
+    """
+    assert mapped.rows <= spec.rows, (
+        f"planes ({mapped.rows} rows) exceed the macro ({spec.rows}); tile first")
+    if chip_ids is None:
+        chip_ids = jnp.arange(n_chips, dtype=jnp.uint32)
+    keys = chip_keys(key, chip_ids)
+    sample = jax.vmap(
+        lambda k: sample_chip_planes(k, mapped.g_pos, mapped.g_neg,
+                                     mapped.scheme, cfg, spec))
+    ep, en, sa_keys = sample(keys)
+    return ChipEnsemble(ep=ep, en=en, gp=mapped.g_pos, gn=mapped.g_neg,
+                        sa_keys=sa_keys, chip_ids=chip_ids, bias_units=None,
+                        scheme=mapped.scheme, fan_in=mapped.fan_in)
+
+
+def shard_ensemble(ens: ChipEnsemble, mesh) -> ChipEnsemble:
+    """Place the ensemble's chips axis over the mesh's data-parallel axes
+    (the "chips" logical rule): chip state never crosses devices, so the
+    vmapped forward and the chip-batched kernel run collective-free with a
+    [chips/D] slice per device."""
+    from jax.sharding import NamedSharding
+    from repro.sharding.rules import chips_pspec
+
+    def put(a):
+        if a is None or a.ndim == 0 or a.shape[0] != ens.n_chips:
+            return a    # shared planes ([rows, n_out]) stay replicated
+        return jax.device_put(a, NamedSharding(
+            mesh, chips_pspec(mesh, ens.n_chips, a.ndim)))
+
+    return dataclasses.replace(
+        ens, ep=put(ens.ep), en=put(ens.en), gp=put(ens.gp), gn=put(ens.gn),
+        sa_keys=put(ens.sa_keys), chip_ids=put(ens.chip_ids),
+        bias_units=put(ens.bias_units))
+
+
+# ------------------------------------------------------------- per-chip bias
+
+def _chip_current_stats(x_ext: jax.Array, ep, en, gp, gn, spec: MacroSpec
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(i_pos, i_neg, p_pair) of one chip on a calibration batch, with the
+    physical effects the SA actually sees (variation pre-applied in ep/en,
+    IR drop here) but no periphery model — mirrors
+    `repro.core.calibration.layer_current_stats` on pre-sampled planes."""
+    cfg = ni.NonidealConfig(device_variation=True, ir_drop=True)
+    blk = spec.ir_block
+    i_pos, p_pos = _accumulate(_block_reduce(x_ext, ep, blk),
+                               _block_reduce(x_ext, gp, blk),
+                               cfg, spec, "single_shot", 256)
+    i_neg, p_neg = _accumulate(_block_reduce(x_ext, en, blk),
+                               _block_reduce(x_ext, gn, blk),
+                               cfg, spec, "single_shot", 256)
+    return i_pos.ravel(), i_neg.ravel(), (p_pos + p_neg).ravel()
+
+
+def calibrate_ensemble_bias(ens: ChipEnsemble, x_calib_bits: jax.Array,
+                            spec: MacroSpec = DEFAULT_MACRO,
+                            candidates: Sequence[int] = (0, 4, 8, 12, 16,
+                                                         20, 24, 28, 32),
+                            ) -> ChipEnsemble:
+    """Per-die extra-bias calibration (Sec. IV-B.4 deployment flow).
+
+    The ensemble must be sampled from a mapping whose `lead_rows` equal the
+    physical bias-row budget; each chip then keeps only its calibrated count
+    `b_c <= lead_rows` active.  Deactivated rows revert to HRS cells on both
+    planes (conductance -> hrs_leak, LRS count -> 0), which is exactly what
+    sampling the masked planes with the same key would have produced.
+    """
+    lead = ens.lead_rows
+    assert lead > 0, "calibration needs bias rows in the mapping (lead_rows>0)"
+    cand = tuple(c for c in candidates if c <= lead)
+    # calibration currents are measured with the bias rows OFF (calibrate_bias
+    # adds each candidate analytically)
+    x_ext = jnp.concatenate(
+        [jnp.zeros(x_calib_bits.shape[:-1] + (lead,), jnp.float32),
+         x_calib_bits.astype(jnp.float32)], axis=-1)
+    stats = jax.jit(jax.vmap(
+        lambda ep, en, gp, gn: _chip_current_stats(x_ext, ep, en, gp, gn, spec),
+        in_axes=(0, 0, None if ens.gp.ndim == 2 else 0,
+                 None if ens.gn.ndim == 2 else 0)))(
+        ens.ep, ens.en, ens.gp, ens.gn)
+    i_pos, i_neg, p_pair = jax.device_get(stats)
+    bias = np.array([calibrate_bias(jnp.asarray(ip), jnp.asarray(ineg),
+                                    jnp.asarray(pp), spec, cand)[0]
+                     for ip, ineg, pp in zip(i_pos, i_neg, p_pair)],
+                    np.float32)
+    bias = jnp.asarray(bias)
+    # row mask [chips, rows]: first b_c of the lead rows stay on
+    row = jnp.arange(ens.rows, dtype=jnp.float32)
+    on = ((row[None, :] < bias[:, None]) | (row[None, :] >= lead)
+          ).astype(jnp.float32)
+    m = on[:, :, None]
+    leak = float(spec.hrs_leak)
+    gp = ens.gp if ens.gp.ndim == 3 else ens.gp[None]
+    gn = ens.gn if ens.gn.ndim == 3 else ens.gn[None]
+    return dataclasses.replace(
+        ens,
+        ep=jnp.where(m > 0, ens.ep, leak), en=jnp.where(m > 0, ens.en, leak),
+        gp=gp * m, gn=gn * m, bias_units=bias)

@@ -1,0 +1,96 @@
+"""Streaming ensemble statistics: Welford moments + exact quantiles.
+
+The MC engine evaluates chips in chunks so the [chips, batch, n_out]
+activation tensor never materializes for the whole ensemble; what survives a
+chunk is (a) the running Welford state of every tracked metric and (b) the
+per-chip SCALAR metric values (a few bytes per chip, kept for exact
+quantiles and for determinism tests).  Welford/Chan merging makes the
+mean/std independent of chunking up to float round-off — covered by
+tests/test_mc.py against a one-shot jnp computation at 1e-6.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Welford(NamedTuple):
+    """Running (count, mean, M2) triplet; elementwise over `mean.shape`."""
+    count: jax.Array
+    mean: jax.Array
+    m2: jax.Array
+
+
+def welford_init(shape=()) -> Welford:
+    z = jnp.zeros(shape, jnp.float32)
+    return Welford(count=jnp.zeros(shape, jnp.float32), mean=z, m2=z)
+
+
+def welford_merge(a: Welford, b: Welford) -> Welford:
+    """Chan parallel combination of two Welford states."""
+    n = a.count + b.count
+    safe_n = jnp.maximum(n, 1.0)
+    delta = b.mean - a.mean
+    mean = a.mean + delta * b.count / safe_n
+    m2 = a.m2 + b.m2 + delta * delta * a.count * b.count / safe_n
+    return Welford(count=n, mean=mean, m2=m2)
+
+
+def welford_add_batch(state: Welford, xs: jax.Array, axis: int = 0) -> Welford:
+    """Fold a batch of samples (along `axis`) into the running state."""
+    xs = xs.astype(jnp.float32)
+    n = jnp.full(state.count.shape, xs.shape[axis], jnp.float32)
+    mean = jnp.mean(xs, axis=axis)
+    m2 = jnp.sum(jnp.square(xs - jnp.expand_dims(mean, axis)), axis=axis)
+    return welford_merge(state, Welford(count=n, mean=mean, m2=m2))
+
+
+def welford_finalize(state: Welford) -> Dict[str, jax.Array]:
+    """Population mean/std (ddof=0, matching jnp defaults)."""
+    var = state.m2 / jnp.maximum(state.count, 1.0)
+    return {"count": state.count, "mean": state.mean,
+            "std": jnp.sqrt(jnp.maximum(var, 0.0))}
+
+
+DEFAULT_QUANTILES = (0.05, 0.25, 0.5, 0.75, 0.95)
+
+
+@dataclasses.dataclass
+class StreamingMoments:
+    """Host-side accumulator for one scalar metric over the chip ensemble.
+
+    Bounded memory: the Welford state is O(1) and the retained per-chip
+    values are scalars (exact quantiles over hundreds-to-thousands of chips
+    cost a few KB; a P2-style approximation would buy nothing here).
+    """
+    quantiles: Sequence[float] = DEFAULT_QUANTILES
+
+    def __post_init__(self):
+        self._state = welford_init()
+        self._values: list = []
+
+    def update(self, chunk_values: jax.Array) -> None:
+        """Fold a [chunk_chips] vector of per-chip metric values."""
+        chunk_values = jnp.ravel(chunk_values)
+        self._state = welford_add_batch(self._state, chunk_values)
+        self._values.append(np.asarray(chunk_values))
+
+    @property
+    def per_chip(self) -> np.ndarray:
+        return (np.concatenate(self._values) if self._values
+                else np.zeros((0,), np.float32))
+
+    def summary(self) -> Dict[str, float]:
+        fin = welford_finalize(self._state)
+        out = {"count": float(fin["count"]), "mean": float(fin["mean"]),
+               "std": float(fin["std"])}
+        vals = self.per_chip
+        if vals.size:
+            qs = np.quantile(vals, np.asarray(self.quantiles, np.float64))
+            out.update({f"q{int(round(q * 100)):02d}": float(v)
+                        for q, v in zip(self.quantiles, qs)})
+        return out

@@ -1,3 +1,3 @@
 from repro.sharding.rules import (LOGICAL_RULES, spec_for_axes,
                                   tree_pspecs, tree_shardings,
-                                  batch_pspec, cache_axes_tree)
+                                  batch_pspec, chips_pspec, cache_axes_tree)

@@ -34,6 +34,10 @@ LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
     "kv_qkv": ("model",),
     "mlp": ("model",),
     "experts": ("model",),
+    # Monte Carlo chip ensembles (repro.mc): the chips axis is embarrassingly
+    # parallel — shard sampled-chip state and per-chip activations over every
+    # data-parallel axis, replicate the shared input batch
+    "chips": ("pod", "data"),
     # activations / caches
     "act_batch": ("pod", "data"),
     "act_seq": (),
@@ -106,6 +110,14 @@ def batch_pspec(mesh: Mesh) -> P:
     """[B, S] token batches: batch over every data-parallel axis present."""
     axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     return P(axes if len(axes) > 1 else (axes[0] if axes else None), None)
+
+
+def chips_pspec(mesh: Mesh, n_chips: int, ndim: int) -> P:
+    """Leading-chips-axis spec for ensemble state / activations, via the
+    "chips" logical rule (divisibility fixup included: an awkward chunk size
+    falls back to replication rather than crashing the device_put)."""
+    return spec_for_axes(("chips",) + (None,) * (ndim - 1),
+                         (n_chips,) + (1,) * (ndim - 1), mesh)
 
 
 # ------------------------------------------------------------------ caches

@@ -1,0 +1,239 @@
+"""Chip-ensemble Monte Carlo engine (repro.mc): determinism, streaming
+statistics, and numerical consistency of the chip-batched paths with the
+single-chip structural simulation / kernel."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DEFAULT_MACRO, NonidealConfig, ternary_quantize,
+                        ternary_planes, binary_quantize, binary_planes,
+                        crossbar_forward, ideal_ternary_matmul)
+from repro.kernels import (IrcEpilogueParams, irc_mvm, irc_mvm_chips,
+                           irc_mvm_chips_ref, irc_mvm_from_mapped)
+from repro.mc import (McConfig, sample_ensemble, calibrate_ensemble_bias,
+                      ensemble_apply, ensemble_apply_kernel, run_mc,
+                      run_ablation, welford_init, welford_add_batch,
+                      welford_finalize, StreamingMoments)
+
+
+def _layer(fan_in=260, n_out=48, batch=16, bias_rows=16, seed=0,
+           scheme="ternary"):
+    k_w, k_x = jax.random.split(jax.random.PRNGKey(seed))
+    w_lat = jax.random.normal(k_w, (fan_in, n_out))
+    if scheme == "ternary":
+        w = ternary_quantize(w_lat)
+        mapped = ternary_planes(w, bias_rows=bias_rows)
+    else:
+        w = binary_quantize(w_lat)
+        mapped = binary_planes(w)
+    x = (jax.random.uniform(k_x, (batch, fan_in)) > 0.5).astype(jnp.float32)
+    return w, mapped, x
+
+
+class TestWelford:
+    @pytest.mark.parametrize("chunks", [[512], [128, 128, 128, 128],
+                                        [1, 7, 100, 404], [500, 12]])
+    def test_chunked_matches_oneshot(self, chunks):
+        xs = jax.random.uniform(jax.random.PRNGKey(3), (sum(chunks),))
+        state = welford_init()
+        lo = 0
+        for n in chunks:
+            state = welford_add_batch(state, xs[lo:lo + n])
+            lo += n
+        fin = welford_finalize(state)
+        np.testing.assert_allclose(float(fin["mean"]), float(jnp.mean(xs)),
+                                   atol=1e-6)
+        np.testing.assert_allclose(float(fin["std"]), float(jnp.std(xs)),
+                                   atol=1e-6)
+        assert float(fin["count"]) == sum(chunks)
+
+    def test_streaming_moments_quantiles(self):
+        xs = jax.random.normal(jax.random.PRNGKey(5), (300,))
+        sm = StreamingMoments()
+        for lo in range(0, 300, 64):
+            sm.update(xs[lo:lo + 64])
+        s = sm.summary()
+        np.testing.assert_allclose(s["mean"], float(jnp.mean(xs)), atol=1e-6)
+        np.testing.assert_allclose(
+            s["q50"], float(np.quantile(np.asarray(xs), 0.5)), atol=1e-6)
+        assert s["q05"] <= s["q25"] <= s["q50"] <= s["q75"] <= s["q95"]
+
+
+class TestEnsembleDeterminism:
+    def test_same_key_same_ensemble(self):
+        _, mapped, _ = _layer()
+        key = jax.random.PRNGKey(11)
+        e1 = sample_ensemble(key, mapped, 8)
+        e2 = sample_ensemble(key, mapped, 8)
+        for a, b in zip(jax.tree.leaves(e1), jax.tree.leaves(e2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_different_key_distinct_chips(self):
+        _, mapped, _ = _layer()
+        e1 = sample_ensemble(jax.random.PRNGKey(11), mapped, 4)
+        e2 = sample_ensemble(jax.random.PRNGKey(12), mapped, 4)
+        assert float(jnp.max(jnp.abs(e1.ep - e2.ep))) > 0.0
+
+    def test_chips_within_ensemble_distinct(self):
+        _, mapped, _ = _layer()
+        ens = sample_ensemble(jax.random.PRNGKey(0), mapped, 4)
+        assert float(jnp.max(jnp.abs(ens.ep[0] - ens.ep[1]))) > 0.0
+
+    def test_same_key_same_statistics(self):
+        w, mapped, x = _layer()
+        ref = (ideal_ternary_matmul(x, w) > 0).astype(jnp.float32)
+        mc = McConfig(n_chips=8, chunk_size=4)
+        key = jax.random.PRNGKey(2)
+        r1 = run_mc(key, mapped, x, ref_bits=ref, mc=mc)
+        r2 = run_mc(key, mapped, x, ref_bits=ref, mc=mc)
+        assert r1.metrics["bit_agreement"] == r2.metrics["bit_agreement"]
+        np.testing.assert_array_equal(r1.per_chip["bit_agreement"],
+                                      r2.per_chip["bit_agreement"])
+        r3 = run_mc(jax.random.PRNGKey(3), mapped, x, ref_bits=ref, mc=mc)
+        assert (r1.metrics["bit_agreement"]["mean"]
+                != r3.metrics["bit_agreement"]["mean"])
+
+    def test_chunking_invisible(self):
+        """Chip c is keyed by fold_in(key, c) regardless of chunk layout."""
+        w, mapped, x = _layer()
+        ref = (ideal_ternary_matmul(x, w) > 0).astype(jnp.float32)
+        key = jax.random.PRNGKey(4)
+        r_small = run_mc(key, mapped, x, ref_bits=ref,
+                         mc=McConfig(n_chips=12, chunk_size=5))
+        r_big = run_mc(key, mapped, x, ref_bits=ref,
+                       mc=McConfig(n_chips=12, chunk_size=12))
+        np.testing.assert_array_equal(r_small.per_chip["bit_agreement"],
+                                      r_big.per_chip["bit_agreement"])
+        np.testing.assert_allclose(r_small.metrics["bit_agreement"]["mean"],
+                                   r_big.metrics["bit_agreement"]["mean"],
+                                   atol=1e-6)
+
+
+class TestEnsembleConsistency:
+    @pytest.mark.parametrize("scheme,accumulation",
+                             [("ternary", "single_shot"),
+                              ("ternary", "partial_sum"),
+                              ("binary", "single_shot")])
+    def test_matches_single_chip_loop(self, scheme, accumulation):
+        """Ensemble chip c == crossbar_forward(fold_in(key, c)) bit-for-bit."""
+        _, mapped, x = _layer(scheme=scheme)
+        cfg = NonidealConfig.all()
+        key = jax.random.PRNGKey(21)
+        ens = sample_ensemble(key, mapped, 5, cfg=cfg)
+        out = ensemble_apply(ens, x, cfg=cfg, accumulation=accumulation,
+                             partial_rows=212)
+        for c in range(5):
+            ref = crossbar_forward(jax.random.fold_in(key, c), x, mapped,
+                                   cfg=cfg, accumulation=accumulation,
+                                   partial_rows=212)
+            np.testing.assert_array_equal(np.asarray(out[c]), np.asarray(ref))
+
+    def test_kernel_backend_matches_single_kernel_loop(self):
+        _, mapped, x = _layer(batch=8)
+        cfg = NonidealConfig.all()
+        key = jax.random.PRNGKey(23)
+        ens = sample_ensemble(key, mapped, 3, cfg=cfg)
+        out = ensemble_apply_kernel(ens, x, cfg=cfg)
+        for c in range(3):
+            ref = irc_mvm_from_mapped(jax.random.fold_in(key, c), x, mapped,
+                                      cfg, DEFAULT_MACRO)
+            np.testing.assert_array_equal(np.asarray(out[c]), np.asarray(ref))
+
+    def test_calibrated_ensemble_runs(self):
+        w, mapped, x = _layer(bias_rows=32)
+        ens = sample_ensemble(jax.random.PRNGKey(1), mapped, 3)
+        cal = calibrate_ensemble_bias(ens, x)
+        assert cal.bias_units.shape == (3,)
+        assert cal.planes_per_chip()
+        assert float(jnp.max(cal.bias_units)) <= 32
+        out = ensemble_apply(cal, x, cfg=NonidealConfig.all())
+        assert out.shape == (3,) + (x.shape[0], mapped.n_out)
+        # deactivated bias rows carry no LRS count on either plane
+        lead = cal.lead_rows
+        counts = np.asarray(jnp.sum(cal.gp[:, :lead, 0], axis=1))
+        np.testing.assert_array_equal(counts, np.asarray(cal.bias_units))
+
+
+class TestChipBatchedKernel:
+    @pytest.mark.parametrize("shape", [(3, 4, 100, 17), (2, 8, 320, 64),
+                                       (4, 2, 63, 130)])
+    def test_matches_vmapped_ref(self, shape):
+        C, B, R, N = shape
+        ks = jax.random.split(jax.random.PRNGKey(sum(shape)), 8)
+        gp = (jax.random.uniform(ks[0], (C, R, N)) < 0.2).astype(jnp.float32)
+        gn = ((jax.random.uniform(ks[1], (C, R, N)) < 0.2).astype(jnp.float32)
+              * (1 - gp))
+        ep = gp * jnp.exp(0.42 * jax.random.normal(ks[2], (C, R, N))) \
+            + (1 - gp) * 1e-4
+        en = gn * jnp.exp(0.42 * jax.random.normal(ks[3], (C, R, N))) \
+            + (1 - gn) * 1e-4
+        x = (jax.random.uniform(ks[4], (B, R)) < 0.5).astype(jnp.float32)
+        eps = jax.random.normal(ks[5], (C, B, N))
+        rnd = jax.random.bernoulli(ks[6], 0.5, (C, B, N)).astype(jnp.float32)
+        params = IrcEpilogueParams()
+        out = irc_mvm_chips(x, ep, en, gp, gn, eps, rnd, params)
+        ref = irc_mvm_chips_ref(x, ep, en, gp, gn, eps, rnd, params)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        # chip c of the batched launch == a single-chip kernel call
+        for c in range(C):
+            sc = irc_mvm(x, ep[c], en[c], gp[c], gn[c], eps[c], rnd[c], params)
+            np.testing.assert_array_equal(np.asarray(out[c]), np.asarray(sc))
+        # shared [R, N] placement planes (one HBM copy for all chips) give
+        # the same result as explicitly per-chip copies
+        gp0 = jnp.broadcast_to(gp[0], (C,) + gp.shape[1:])
+        gn0 = jnp.broadcast_to(gn[0], (C,) + gn.shape[1:])
+        shared = irc_mvm_chips(x, ep, en, gp[0], gn[0], eps, rnd, params)
+        full = irc_mvm_chips(x, ep, en, gp0, gn0, eps, rnd, params)
+        np.testing.assert_array_equal(np.asarray(shared), np.asarray(full))
+        ref_sh = irc_mvm_chips_ref(x, ep, en, gp[0], gn[0], eps, rnd, params)
+        np.testing.assert_array_equal(np.asarray(shared), np.asarray(ref_sh))
+
+
+class TestRunMc:
+    def test_64_chips_all_effects_single_jitted_call(self):
+        """Acceptance: >= 64 chips, all effects, one jitted computation,
+        mean/std/quantile statistics out."""
+        w, mapped, x = _layer(fan_in=128, n_out=32, batch=16)
+        ref = (ideal_ternary_matmul(x, w) > 0).astype(jnp.float32)
+        cfg = NonidealConfig.all()
+        key = jax.random.PRNGKey(0)
+        ens = sample_ensemble(key, mapped, 64, cfg=cfg)
+        out = ensemble_apply(ens, x, cfg=cfg)     # one jitted call, 64 chips
+        assert out.shape == (64, 16, 32)
+        res = run_mc(key, mapped, x, ref_bits=ref,
+                     mc=McConfig(n_chips=64, chunk_size=64, cfg=cfg))
+        m = res.metrics["bit_agreement"]
+        assert 0.0 < m["mean"] <= 1.0 and m["std"] > 0.0
+        assert m["q05"] <= m["q50"] <= m["q95"]
+        assert res.per_chip["bit_agreement"].shape == (64,)
+        # the chunked streaming mean equals the one-shot jnp mean
+        per_chip = jnp.mean(
+            (out > 0.5).astype(jnp.float32) == ref, axis=(1, 2))
+        np.testing.assert_allclose(m["mean"], float(jnp.mean(per_chip)),
+                                   atol=1e-6)
+        np.testing.assert_allclose(m["std"], float(jnp.std(per_chip)),
+                                   atol=1e-6)
+
+    def test_ablation_sweep_orders_effects(self):
+        w, mapped, x = _layer(fan_in=128, n_out=32, batch=16)
+        ref = (ideal_ternary_matmul(x, w) > 0).astype(jnp.float32)
+        res = run_ablation(jax.random.PRNGKey(1), mapped, x, ref_bits=ref,
+                           mc=McConfig(n_chips=8, chunk_size=8))
+        agree = {k: v.metrics["bit_agreement"]["mean"]
+                 for k, v in res.items()}
+        assert agree["ideal"] >= agree["devvar"] >= agree["all"] - 1e-6
+
+    def test_sharded_run_matches_unsharded(self):
+        from repro.launch.mesh import make_host_mesh
+        w, mapped, x = _layer(fan_in=96, n_out=16, batch=8)
+        ref = (ideal_ternary_matmul(x, w) > 0).astype(jnp.float32)
+        key = jax.random.PRNGKey(9)
+        mc = McConfig(n_chips=4, chunk_size=4)
+        r0 = run_mc(key, mapped, x, ref_bits=ref, mc=mc)
+        r1 = run_mc(key, mapped, x, ref_bits=ref, mc=mc,
+                    mesh=make_host_mesh())
+        np.testing.assert_array_equal(r0.per_chip["bit_agreement"],
+                                      r1.per_chip["bit_agreement"])
