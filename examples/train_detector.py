@@ -108,11 +108,11 @@ def main():
                                       n_anchors=cfg.n_anchors)
         print(f"\n=== {design} design: QAT ({args.steps} steps) ===")
         params = train(det, data, args.steps, args.batch, args.lr)
-        if cfg.use_bn:
-            # deployment step: populate BN running stats from a calibration
-            # batch so the in-memory BN fold reflects trained activations
-            calib = data.batch_for_step(999, args.batch * 4)
-            params = det.calibrate_bn(params, calib.images)
+        # deployment step (both designs): populate the digital stem's running
+        # stats — eval mode normalizes with them — and, for the baseline, the
+        # block BN stats the in-memory BN fold maps into bias cells
+        calib = data.batch_for_step(999, args.batch * 4)
+        params = det.calibrate_bn(params, calib.images)
 
         print(f"=== {design}: structural-sim ablation "
               f"({args.seeds} nonideal seeds) ===")

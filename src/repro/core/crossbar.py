@@ -135,6 +135,11 @@ def crossbar_apply(k_sa: jax.Array, x_ext: jax.Array,
     ep/en: effective conductances (variation/leak applied); gp/gn: binary LRS
     placement planes (ideal counts).  This is the function `repro.mc` vmaps
     over a leading chips axis — all chip identity lives in (k_sa, ep, en).
+
+    output: "binary" — SA decisions; "diff" — raw analog difference (ideal
+    readout, for calibration); "sensed_diff" — the difference the periphery
+    reports, with per-macro SA offset and sensing-range failures applied
+    (what a digital combiner of multi-macro layers receives).
     """
     blk = spec.ir_block
     i_pos, p_pos = _accumulate(_block_reduce(x_ext, ep, blk),
@@ -146,6 +151,9 @@ def crossbar_apply(k_sa: jax.Array, x_ext: jax.Array,
     if output == "diff":
         return i_pos - i_neg
     p_pair = p_pos + p_neg
+    if output == "sensed_diff":
+        return ni.sensed_diff(k_sa, i_pos, i_neg, p_pair, cfg, spec,
+                              sa_extra_units)
     return ni.resolve_sa(k_sa, i_pos, i_neg, p_pair, cfg, spec, sa_extra_units)
 
 
@@ -305,9 +313,16 @@ class IRCLinear:
         if mode == "train":
             return irc_linear_train(key, x, params["w"], cfg=cfg, spec=spec,
                                     scheme=c.scheme, output=c.output)
-        # evaluation: full structural sim, tiled over macros
+        # evaluation: full structural sim, tiled over macros.  Multi-tile
+        # layers combine PER-TILE SENSED differences digitally: each macro's
+        # SA front-end applies its own offset and sensing-range failures
+        # before the combine ("diff" output stays the ideal analog readout
+        # for calibration/heads).
         x_bits = jnp.where(x > 0, 1.0, 0.0).astype(jnp.float32)
         tiles = self.map_to_planes(params)
+        multi = len(tiles) > 1
+        tile_out = ("diff" if c.output == "diff"
+                    else ("sensed_diff" if multi else "binary"))
         diffs = []
         offset = 0
         for t, tile in enumerate(tiles):
@@ -318,9 +333,8 @@ class IRCLinear:
             diffs.append(crossbar_forward(
                 k_t, x_t, tile, cfg=cfg, spec=spec,
                 accumulation=c.accumulation, partial_rows=c.partial_rows,
-                sa_extra_units=sa_extra_units,
-                output="diff" if (len(tiles) > 1 or c.output == "diff") else "binary"))
-        if len(tiles) == 1:
+                sa_extra_units=sa_extra_units, output=tile_out))
+        if not multi:
             return diffs[0]
         total = sum(diffs)
         if c.output == "diff":

@@ -1,8 +1,17 @@
 """CLI for the chip-ensemble Monte Carlo engine (`repro.mc`).
 
-Evaluates a population of sampled chip instances of one IRC layer and prints
-Table-II-style mean±std bit-agreement columns (the mAP-drop proxy used across
-the benchmark suite), plus quantiles and throughput.
+Two network levels:
+
+  --network layer (default): a population of sampled chip instances of ONE
+  IRC layer, Table-II-style mean±std bit-agreement columns (the mAP-drop
+  proxy), plus quantiles and throughput.
+
+  --network detector: WHOLE-network MC — a chip population of the IRC
+  detector (`DetectorEnsemble`), metric = mAP@0.5 per chip on a synthetic
+  IVS-geometry eval batch, i.e. Table II in the paper's own units.  Weights
+  are random-init unless `--det-steps` runs a short QAT first, so absolute
+  mAP is only meaningful with training; drops and spreads are reported the
+  same way either way.
 
   # 64-chip ensemble, all nonideal effects, proposed design
   PYTHONPATH=src python -m repro.launch.mc --chips 64
@@ -14,6 +23,10 @@ the benchmark suite), plus quantiles and throughput.
   # per-die bias calibration + JSON report
   PYTHONPATH=src python -m repro.launch.mc --chips 64 --calibrate \
       --json experiments/mc_proposed.json
+
+  # whole-detector population mAP, smoke geometry, 16 chips
+  PYTHONPATH=src python -m repro.launch.mc --network detector --chips 16 \
+      --det-steps 100 --ablation table2
 """
 from __future__ import annotations
 
@@ -43,9 +56,97 @@ def build_layer(args):
     return mapped, x, ref_bits
 
 
+def _ablation_columns(args, table):
+    """Resolve --ablation into named columns; the ideal column always runs
+    (drop_vs_ideal is measured against the simulated ideal, never 1.0)."""
+    if args.ablation == "table2":
+        return list(table)
+    by_name = dict(table)
+    if args.ablation not in by_name:
+        raise SystemExit(f"unknown ablation column: {args.ablation!r} "
+                         f"(choices: table2, {', '.join(by_name)})")
+    columns = [("ideal", by_name["ideal"])]
+    if args.ablation != "ideal":
+        columns.append((args.ablation, by_name[args.ablation]))
+    return columns
+
+
+def _write_report(args, report) -> None:
+    if not args.json:
+        return
+    out = Path(args.json)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=1))
+    print(f"# wrote {out}")
+
+
+def run_detector(args) -> None:
+    """Whole-network MC: population mAP@0.5 of the smoke-geometry detector."""
+    import jax
+    import numpy as np
+    from repro.configs import yolo_irc
+    from repro.data.detection import SyntheticDetectionData
+    from repro.models import IRCDetector
+    from repro.mc import McConfig, run_mc_detector, TABLE2_ABLATION
+
+    cfg = yolo_irc.smoke(args.det_scheme)
+    det = IRCDetector(cfg)
+    data = SyntheticDetectionData(img_hw=cfg.img_hw, stride=cfg.strides,
+                                  n_classes=cfg.n_classes,
+                                  n_anchors=cfg.n_anchors)
+    if args.det_steps:
+        from repro.train.det_qat import quick_qat
+        params = quick_qat(det, data, args.det_steps, args.det_batch,
+                           seed=args.seed)
+    else:
+        params = det.init(jax.random.PRNGKey(args.seed))
+    # deployment calibration: stem running stats (+ baseline block BN)
+    calib = data.batch_for_step(999, args.det_batch * 4)
+    params = det.calibrate_bn(params, calib.images)
+    ev = data.batch_for_step(1000, args.det_batch)
+
+    mc = McConfig(n_chips=args.chips, chunk_size=args.chunk)
+    key = jax.random.PRNGKey(args.seed)
+    results = {}
+    for name, cfg_ni in _ablation_columns(args, TABLE2_ABLATION):
+        results[name] = run_mc_detector(
+            key, det, params, ev.images, ev.boxes, ev.classes,
+            mc=dataclasses.replace(mc, cfg=cfg_ni))
+
+    ideal_mean = results["ideal"].metrics["map50"]["mean"]
+    print(f"# detector {args.det_scheme} {cfg.img_hw[0]}x{cfg.img_hw[1]} "
+          f"batch={args.det_batch} chips={args.chips} "
+          f"qat_steps={args.det_steps}")
+    print("config,map50_mean,map50_std,drop_vs_ideal,q05,q50,q95,chips_per_s")
+    report = {"args": vars(args), "results": {}}
+    for name, res in results.items():
+        m = res.metrics["map50"]
+        print(f"{name},{m['mean']:.4f},{m['std']:.4f},"
+              f"{ideal_mean - m['mean']:.4f},"
+              f"{m.get('q05', float('nan')):.4f},"
+              f"{m.get('q50', float('nan')):.4f},"
+              f"{m.get('q95', float('nan')):.4f},{res.chips_per_sec:.2f}")
+        report["results"][name] = {
+            "metrics": res.metrics, "wall_s": res.wall_s,
+            "chips_per_sec": res.chips_per_sec,
+            "per_chip_map50": res.per_chip["map50"].tolist()}
+    _write_report(args, report)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         description="chip-ensemble Monte Carlo sweep (repro.mc)")
+    ap.add_argument("--network", default="layer",
+                    choices=["layer", "detector"],
+                    help="layer: one IRC layer, bit-agreement proxy; "
+                         "detector: whole-network mAP@0.5 population sweep")
+    ap.add_argument("--det-scheme", default="ternary",
+                    choices=["ternary", "binary"],
+                    help="detector design (proposed ternary | baseline binary)")
+    ap.add_argument("--det-batch", type=int, default=2,
+                    help="detector eval batch size")
+    ap.add_argument("--det-steps", type=int, default=0,
+                    help="short QAT before the detector sweep (0 = random init)")
     ap.add_argument("--chips", type=int, default=64)
     ap.add_argument("--chunk", type=int, default=32)
     ap.add_argument("--batch", type=int, default=256)
@@ -68,8 +169,23 @@ def main() -> None:
     ap.add_argument("--json", default="", help="write the report here")
     args = ap.parse_args()
 
+    if args.network == "detector":
+        # layer-only knobs have no detector equivalent: fail loudly rather
+        # than emit a report whose vars(args) provenance silently lies
+        layer_only = ("scheme", "fan_in", "n_out", "density", "bias_rows",
+                      "accumulation", "backend", "calibrate", "batch")
+        misused = [f"--{n.replace('_', '-')}" for n in layer_only
+                   if getattr(args, n) != ap.get_default(n)]
+        if misused:
+            raise SystemExit(
+                f"--network detector does not take {', '.join(misused)} "
+                f"(layer-path flags; use --det-scheme/--det-batch/"
+                f"--det-steps)")
+        run_detector(args)
+        return
+
     import jax
-    from repro.mc import McConfig, run_mc, run_ablation, TABLE2_ABLATION
+    from repro.mc import McConfig, run_mc, TABLE2_ABLATION
 
     mapped, x, ref_bits = build_layer(args)
     mc = McConfig(n_chips=args.chips, chunk_size=args.chunk,
@@ -77,22 +193,9 @@ def main() -> None:
                   calibrate=args.calibrate)
     key = jax.random.PRNGKey(args.seed)
 
-    if args.ablation == "table2":
-        results = run_ablation(key, mapped, x, ref_bits=ref_bits, mc=mc)
-    else:
-        by_name = dict(TABLE2_ABLATION)
-        if args.ablation not in by_name:
-            raise SystemExit(f"unknown ablation column: {args.ablation!r} "
-                             f"(choices: table2, {', '.join(by_name)})")
-        # the ideal column always runs too: drop_vs_ideal must be measured
-        # against the simulated ideal (hrs_leak + tie-breaking keep its
-        # agreement below 1), never against a literal 1.0
-        columns = [("ideal", by_name["ideal"])]
-        if args.ablation != "ideal":
-            columns.append((args.ablation, by_name[args.ablation]))
-        results = {name: run_mc(key, mapped, x, ref_bits=ref_bits,
-                                mc=dataclasses.replace(mc, cfg=cfg))
-                   for name, cfg in columns}
+    results = {name: run_mc(key, mapped, x, ref_bits=ref_bits,
+                            mc=dataclasses.replace(mc, cfg=cfg))
+               for name, cfg in _ablation_columns(args, TABLE2_ABLATION)}
 
     ideal_mean = results["ideal"].metrics["bit_agreement"]["mean"]
     print(f"# {args.scheme} {args.fan_in}x{args.n_out} batch={args.batch} "
@@ -114,11 +217,7 @@ def main() -> None:
                 res.per_chip["bit_agreement"].tolist(),
             "bias_units": (res.bias_units.tolist()
                            if res.bias_units is not None else None)}
-    if args.json:
-        out = Path(args.json)
-        out.parent.mkdir(parents=True, exist_ok=True)
-        out.write_text(json.dumps(report, indent=1))
-        print(f"# wrote {out}")
+    _write_report(args, report)
 
 
 if __name__ == "__main__":

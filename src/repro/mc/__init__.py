@@ -10,15 +10,21 @@ this package evaluates a population of dies as ONE array program:
   ensemble_apply_kernel            chip-batched fused Pallas launch
   run_mc / run_ablation            streaming Welford/quantile sweeps
                                    (Table II mean±std columns)
+  DetectorEnsemble /               whole-network MC: chip populations of the
+  run_mc_detector                  detector, metric = host-side mAP@0.5
 
-CLI: `python -m repro.launch.mc`; perf: `benchmarks/mc_bench.py`.
+CLI: `python -m repro.launch.mc` (`--network detector` for whole-network
+mAP sweeps); perf: `benchmarks/mc_bench.py`.
 """
-from repro.mc.ensemble import (ChipEnsemble, sample_ensemble, chip_keys,
+from repro.mc.ensemble import (ChipEnsemble, sample_ensemble,
+                               sample_ensemble_with_keys, chip_keys,
                                calibrate_ensemble_bias, shard_ensemble)
 from repro.mc.engine import (McConfig, McResult, ensemble_apply,
                              ensemble_apply_kernel, run_mc, run_ablation,
                              bit_agreement_metric, ones_fraction_metric,
                              TABLE2_ABLATION)
+from repro.mc.detector_mc import (DetectorEnsemble, build_detector_ensemble,
+                                  run_mc_detector, run_ablation_detector)
 from repro.mc.stats import (Welford, welford_init, welford_merge,
                             welford_add_batch, welford_finalize,
                             StreamingMoments, DEFAULT_QUANTILES)

@@ -1,0 +1,166 @@
+"""Whole-network chip-ensemble MC for the IRC detector (Table II, in the
+paper's own units).
+
+`repro.mc.engine` evaluates chip populations of ONE mapped layer and reports
+bit-agreement proxies; the paper's headline result (3.85% mAP drop under all
+nonideal effects vs. catastrophic baseline failure) is a statistic of the
+WHOLE detector over sampled chips.  This module threads `ChipEnsemble`
+through the detector stack:
+
+  DetectorEnsemble / build_detector_ensemble
+      pre-sampled per-layer, per-group chip planes.  Chip `c`, layer `l`
+      (= s*10+b), group `g` is sampled with
+      `fold_in(fold_in(fold_in(key, c), l), g)` — chip-consistent with
+      `IRCDetector.apply`'s single-chip key discipline, so chip `c` of the
+      ensemble path is bit-identical to `apply(mode="eval",
+      key=fold_in(key, c))`.
+  run_mc_detector / run_ablation_detector
+      stream the population in chunks through the jitted ensemble structural
+      path and fold each chip's HOST-side mAP@0.5 (`evaluate_map_per_chip`)
+      into the engine's Welford/quantile accumulators — the same
+      McConfig/McResult machinery as the layer-level sweeps.
+
+All chips of a die design share the LRS placement planes, so each layer
+ensemble stores ONE [rows, n_out] placement copy; only the effective
+conductances ([chips, rows, n_out]) and SA keys are per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nonideal as ni
+from repro.core.macro import MacroSpec
+from repro.mc.engine import McConfig, McResult, TABLE2_ABLATION
+from repro.mc.ensemble import ChipEnsemble, sample_ensemble_with_keys
+from repro.mc.stats import StreamingMoments
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DetectorEnsemble:
+    """A chip population of the whole detector.
+
+    layers:   block name ("s{s}b{b}") -> per-group `ChipEnsemble`s, in the
+              group order of `IRCDetector.group_mappings`.
+    chip_ids: [chips] global chip indices (fold_in stream positions), shared
+              by every layer ensemble — one die is one draw of EVERY layer.
+    """
+    layers: Dict[str, Tuple[ChipEnsemble, ...]]
+    chip_ids: jax.Array
+
+    @property
+    def n_chips(self) -> int:
+        return self.chip_ids.shape[0]
+
+
+def build_detector_ensemble(key: jax.Array, det, params, n_chips: int = 0, *,
+                            chip_ids: Optional[jax.Array] = None,
+                            cfg: ni.NonidealConfig = ni.NonidealConfig.all(),
+                            ) -> DetectorEnsemble:
+    """Sample a chip population of every group crossbar in the detector.
+
+    Pass `chip_ids` to sample an arbitrary slice of the logical ensemble
+    (how the streaming sweep bounds memory); the key chain per (chip, layer,
+    group) matches the single-chip eval path exactly.
+    """
+    dcfg = det.cfg
+    if chip_ids is None:
+        chip_ids = jnp.arange(n_chips, dtype=jnp.uint32)
+    layers: Dict[str, Tuple[ChipEnsemble, ...]] = {}
+    for s, (ch, nb) in enumerate(zip(dcfg.stage_channels,
+                                     dcfg.blocks_per_stage)):
+        c_in = dcfg.stage_channels[max(0, s - 1)] if s else ch
+        for b in range(nb):
+            cin = max(c_in if b == 0 else ch, ch)   # widen-by-repetition
+            name = f"s{s}b{b}"
+            groups = []
+            for g, mapped in enumerate(det.group_mappings(params[name],
+                                                          cin, ch)):
+                layer_id = s * 10 + b
+                keys = jax.vmap(lambda i: jax.random.fold_in(
+                    jax.random.fold_in(jax.random.fold_in(key, i),
+                                       layer_id), g))(chip_ids)
+                groups.append(sample_ensemble_with_keys(
+                    keys, mapped, chip_ids=chip_ids, cfg=cfg, spec=det.spec))
+            layers[name] = tuple(groups)
+    return DetectorEnsemble(layers=layers, chip_ids=chip_ids)
+
+
+@functools.partial(jax.jit, static_argnames=("det_cfg", "spec", "cfg_ni",
+                                             "sa_extra"))
+def _ensemble_forward(params, images, ens: DetectorEnsemble, *, det_cfg,
+                      spec: MacroSpec, cfg_ni: ni.NonidealConfig,
+                      sa_extra: float) -> jax.Array:
+    """Module-level jitted ensemble forward: the compile cache is keyed on
+    the (hashable) detector config, so repeated `run_mc_detector` calls —
+    chunk streams, ablation columns, benchmark reruns — reuse one program
+    per shape instead of retracing a per-call closure."""
+    from repro.models.detector import IRCDetector
+    det = IRCDetector(det_cfg, spec)
+    return det.apply(params, images, mode="ensemble", ensemble=ens,
+                     cfg_ni=cfg_ni, sa_extra=sa_extra)
+
+
+def run_mc_detector(key: jax.Array, det, params, images: jax.Array,
+                    gt_boxes: List[np.ndarray],
+                    gt_classes: List[np.ndarray], *,
+                    mc: McConfig = McConfig(),
+                    sa_extra: float = 0.0) -> McResult:
+    """Stream a chip population of the WHOLE detector over an eval batch.
+
+    Per chunk: build the chunk's `DetectorEnsemble`, run ONE jitted
+    ensemble structural forward (all chips, all layers), then fold each
+    chip's host-side mAP@0.5 into the streaming accumulators.  The metric
+    name is "map50"; chunking is statistically invisible (chip `c` is keyed
+    by `fold_in(key, c)` regardless of chunk layout).
+
+    `params` should carry calibrated stem-BN running stats
+    (`det.calibrate_bn`) — eval-mode normalization uses them.
+    """
+    from repro.train.det_loss import evaluate_map_per_chip
+
+    moments = {"map50": StreamingMoments(mc.quantiles)}
+
+    t0 = time.perf_counter()
+    for lo in range(0, mc.n_chips, mc.chunk_size):
+        ids = jnp.arange(lo, min(lo + mc.chunk_size, mc.n_chips),
+                         dtype=jnp.uint32)
+        ens = build_detector_ensemble(key, det, params, chip_ids=ids,
+                                      cfg=mc.cfg)
+        preds = np.asarray(jax.block_until_ready(_ensemble_forward(
+            params, images, ens, det_cfg=det.cfg, spec=det.spec,
+            cfg_ni=mc.cfg, sa_extra=sa_extra)))
+        moments["map50"].update(jnp.asarray(evaluate_map_per_chip(
+            preds, gt_boxes, gt_classes, det.cfg.n_anchors,
+            det.cfg.n_classes)))
+    wall = time.perf_counter() - t0
+
+    return McResult(
+        n_chips=mc.n_chips,
+        metrics={name: m.summary() for name, m in moments.items()},
+        per_chip={name: m.per_chip for name, m in moments.items()},
+        wall_s=wall, chips_per_sec=mc.n_chips / max(wall, 1e-9))
+
+
+def run_ablation_detector(key: jax.Array, det, params, images: jax.Array,
+                          gt_boxes: List[np.ndarray],
+                          gt_classes: List[np.ndarray], *,
+                          ablations: Sequence[Tuple[str, ni.NonidealConfig]]
+                          = TABLE2_ABLATION,
+                          mc: McConfig = McConfig()) -> Dict[str, McResult]:
+    """Table II for the detector: one population mAP sweep per effect
+    column, same chip key stream across columns (each effect set resamples
+    the same dies' variation)."""
+    results = {}
+    for name, cfg in ablations:
+        results[name] = run_mc_detector(
+            key, det, params, images, gt_boxes, gt_classes,
+            mc=dataclasses.replace(mc, cfg=cfg))
+    return results

@@ -43,12 +43,13 @@ def _extend(x_bits: jax.Array, lead_rows: int) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("cfg", "spec", "accumulation",
                                              "partial_rows", "sa_extra_units",
-                                             "output"))
+                                             "output", "per_chip_x"))
 def ensemble_apply(ens: ChipEnsemble, x_bits: jax.Array, *,
                    cfg: ni.NonidealConfig, spec: MacroSpec = DEFAULT_MACRO,
                    accumulation: str = "single_shot", partial_rows: int = 256,
                    sa_extra_units: float = 0.0,
-                   output: str = "binary") -> jax.Array:
+                   output: str = "binary",
+                   per_chip_x: bool = False) -> jax.Array:
     """Evaluate every chip on a shared input batch: [chips, batch, n_out].
 
     Chip `c`'s slice equals `crossbar_forward(fold_in(key, c), x, mapped, ...)`
@@ -58,8 +59,25 @@ def ensemble_apply(ens: ChipEnsemble, x_bits: jax.Array, *,
     block dots are hoisted OUT of the chips vmap — counts are sums of {0,1}
     products, exact in f32 at any summation order, so sharing them across the
     ensemble halves the matmul work without changing a single output bit.
+
+    With `per_chip_x`, x_bits carries a leading chips axis ([chips, batch,
+    fan_in]) — how network-level MC feeds chip-diverged activations from one
+    IRC layer into the next.  Counts then depend on each chip's own inputs,
+    so nothing hoists, but the placement planes still pass through as ONE
+    shared [rows, n_out] array.
     """
     x_ext = _extend(x_bits, ens.lead_rows)
+    if per_chip_x:
+        assert x_bits.ndim >= 3 and x_bits.shape[0] == ens.n_chips, (
+            f"per_chip_x needs [chips={ens.n_chips}, ..., fan_in] inputs, "
+            f"got {x_bits.shape}")
+        in_g = 0 if ens.planes_per_chip() else None
+        fwd = lambda k, xc, ep, en, gp, gn: crossbar_apply(
+            k, xc, ep, en, gp, gn, cfg=cfg, spec=spec,
+            accumulation=accumulation, partial_rows=partial_rows,
+            sa_extra_units=sa_extra_units, output=output)
+        return jax.vmap(fwd, in_axes=(0, 0, 0, 0, in_g, in_g))(
+            ens.sa_keys, x_ext, ens.ep, ens.en, ens.gp, ens.gn)
     if ens.planes_per_chip():
         fwd = lambda k, ep, en, gp, gn: crossbar_apply(
             k, x_ext, ep, en, gp, gn, cfg=cfg, spec=spec,
@@ -78,6 +96,9 @@ def ensemble_apply(ens: ChipEnsemble, x_bits: jax.Array, *,
                                    cfg, spec, accumulation, partial_rows)
         if output == "diff":
             return i_pos - i_neg
+        if output == "sensed_diff":
+            return ni.sensed_diff(k_sa, i_pos, i_neg, p_pos + p_neg, cfg,
+                                  spec, sa_extra_units)
         return ni.resolve_sa(k_sa, i_pos, i_neg, p_pos + p_neg, cfg, spec,
                              sa_extra_units)
 
@@ -198,10 +219,14 @@ class McResult:
                 f"[{self.chips_per_sec:.1f} chips/s]")
 
 
+HostMetricFn = Callable[[np.ndarray], np.ndarray]   # [chips,B,N] -> [chips]
+
+
 def run_mc(key: jax.Array, mapped, x_bits: jax.Array, *,
            ref_bits: Optional[jax.Array] = None,
            mc: McConfig = McConfig(), spec: MacroSpec = DEFAULT_MACRO,
            metric_fns: Optional[Dict[str, MetricFn]] = None,
+           host_metric_fns: Optional[Dict[str, HostMetricFn]] = None,
            x_calib_bits: Optional[jax.Array] = None, mesh=None) -> McResult:
     """Stream an ensemble of `mc.n_chips` sampled chips over `x_bits`.
 
@@ -209,7 +234,10 @@ def run_mc(key: jax.Array, mapped, x_bits: jax.Array, *,
     `chunk_size` chips of [rows, n_out] planes or [chunk, B, n_out]
     activations) and their per-chip metrics fold into streaming accumulators.
     `ref_bits` ([B, n_out] ideal binary output) enables the default
-    `bit_agreement` metric; pass `metric_fns` for custom reductions.
+    `bit_agreement` metric; pass `metric_fns` for custom on-device
+    reductions, or `host_metric_fns` for callbacks that need the chunk's
+    outputs on the host (e.g. `evaluate_map` — NMS/AP are not array
+    programs); host values fold into the same Welford/quantile accumulators.
     With `mesh`, each chunk's chips axis shards over the data-parallel axes
     (the "chips" rule) — the workload is embarrassingly parallel per chip.
     """
@@ -219,7 +247,9 @@ def run_mc(key: jax.Array, mapped, x_bits: jax.Array, *,
     fns["ones_fraction"] = ones_fraction_metric()
     if metric_fns:
         fns.update(metric_fns)
-    moments = {name: StreamingMoments(mc.quantiles) for name in fns}
+    host_fns: Dict[str, HostMetricFn] = dict(host_metric_fns or {})
+    moments = {name: StreamingMoments(mc.quantiles)
+               for name in (*fns, *host_fns)}
     bias_chunks: List[np.ndarray] = []
 
     if mc.backend == "kernel" and mc.accumulation != "single_shot":
@@ -227,9 +257,9 @@ def run_mc(key: jax.Array, mapped, x_bits: jax.Array, *,
 
     # Fast path: default metrics, no calibration/sharding -> the cached
     # fused chunk program.  Calibration (host loop), explicit sharding,
-    # custom metrics and the kernel backend keep the step-by-step path.
+    # custom/host metrics and the kernel backend keep the step-by-step path.
     use_fused = (not mc.calibrate and mesh is None and mc.backend == "jnp"
-                 and not metric_fns)
+                 and not metric_fns and not host_fns)
 
     t0 = time.perf_counter()
     for lo in range(0, mc.n_chips, mc.chunk_size):
@@ -263,6 +293,10 @@ def run_mc(key: jax.Array, mapped, x_bits: jax.Array, *,
         out = jax.block_until_ready(out)
         for name, fn in fns.items():
             moments[name].update(fn(out))
+        if host_fns:
+            out_np = np.asarray(out)
+            for name, fn in host_fns.items():
+                moments[name].update(jnp.asarray(fn(out_np)))
     wall = time.perf_counter() - t0
 
     return McResult(
@@ -291,12 +325,14 @@ def run_ablation(key: jax.Array, mapped, x_bits: jax.Array, *,
                  ref_bits: jax.Array,
                  ablations: Sequence[Tuple[str, ni.NonidealConfig]]
                  = TABLE2_ABLATION,
-                 mc: McConfig = McConfig(), spec: MacroSpec = DEFAULT_MACRO
+                 mc: McConfig = McConfig(), spec: MacroSpec = DEFAULT_MACRO,
+                 host_metric_fns: Optional[Dict[str, HostMetricFn]] = None
                  ) -> Dict[str, McResult]:
     """Per-effect ensemble sweep: one `run_mc` per Table-II column, same
     chip key stream (each effect set resamples the same dies' variation)."""
     results = {}
     for name, cfg in ablations:
         results[name] = run_mc(key, mapped, x_bits, ref_bits=ref_bits,
-                               mc=dataclasses.replace(mc, cfg=cfg), spec=spec)
+                               mc=dataclasses.replace(mc, cfg=cfg), spec=spec,
+                               host_metric_fns=host_metric_fns)
     return results

@@ -93,11 +93,29 @@ def sample_ensemble(key: jax.Array, mapped: MappedLayer, n_chips: int = 0,
     logical ensemble (how the streaming engine bounds memory: chunked ids,
     one `fold_in` stream, identical chips regardless of chunking).
     """
+    if chip_ids is None:
+        chip_ids = jnp.arange(n_chips, dtype=jnp.uint32)
+    return sample_ensemble_with_keys(chip_keys(key, chip_ids), mapped,
+                                     chip_ids=chip_ids, cfg=cfg, spec=spec)
+
+
+def sample_ensemble_with_keys(keys: jax.Array, mapped: MappedLayer, *,
+                              chip_ids: Optional[jax.Array] = None,
+                              cfg: ni.NonidealConfig = ni.NonidealConfig.all(),
+                              spec: MacroSpec = DEFAULT_MACRO) -> ChipEnsemble:
+    """Sample chips from EXPLICIT per-chip keys [chips] instead of the
+    default `fold_in(key, c)` stream.
+
+    This is how network-level ensembles keep each layer's key discipline:
+    the detector samples (chip c, layer l, group g) with
+    `fold_in(fold_in(fold_in(key, c), l), g)` so chip c of every layer
+    ensemble is bit-identical to the single-chip structural path
+    (`IRCDetector.apply(mode="eval", key=fold_in(key, c))`).
+    """
     assert mapped.rows <= spec.rows, (
         f"planes ({mapped.rows} rows) exceed the macro ({spec.rows}); tile first")
     if chip_ids is None:
-        chip_ids = jnp.arange(n_chips, dtype=jnp.uint32)
-    keys = chip_keys(key, chip_ids)
+        chip_ids = jnp.arange(keys.shape[0], dtype=jnp.uint32)
     sample = jax.vmap(
         lambda k: sample_chip_planes(k, mapped.g_pos, mapped.g_neg,
                                      mapped.scheme, cfg, spec))

@@ -69,10 +69,17 @@ class IRCDetector:
             # digital stem: 3x3 s2 conv to first stage width
             "stem": ParamSpec((3, 3, 3, cfg.stage_channels[0]),
                               (None, None, None, "mlp"), dtype=cfg.dtype),
+            # stem BN carries running stats: eval mode must normalize with
+            # CALIBRATION statistics (batch statistics at eval would make
+            # outputs depend on batch composition — see `calibrate_bn`)
             "stem_bn": {"gamma": ParamSpec((cfg.stage_channels[0],), ("mlp",),
                                            init="ones", dtype=cfg.dtype),
                         "beta": ParamSpec((cfg.stage_channels[0],), ("mlp",),
-                                          init="zeros", dtype=cfg.dtype)},
+                                          init="zeros", dtype=cfg.dtype),
+                        "mean": ParamSpec((cfg.stage_channels[0],), ("mlp",),
+                                          init="zeros", dtype=cfg.dtype),
+                        "var": ParamSpec((cfg.stage_channels[0],), ("mlp",),
+                                         init="ones", dtype=cfg.dtype)},
         }
         for s, (ch, nb) in enumerate(zip(cfg.stage_channels,
                                          cfg.blocks_per_stage)):
@@ -152,9 +159,15 @@ class IRCDetector:
                 pre = (jnp.abs(bn["gamma"]) * (pre - mu)
                        / jnp.sqrt(var + 1e-5) + bn["beta"])
             if cfg_ni.any():
-                # QAT noise surrogate at the pre-activation level
+                # QAT noise surrogate at the pre-activation level.  The
+                # activated-LRS fraction comes from the quantized weights
+                # (ternary 20/60/20 -> ~0.4, binary -> ~1.0), as in
+                # `irc_linear_train`: the baseline's differential pairs are
+                # ~100% LRS-active, so a hardcoded ternary fraction would
+                # understate its p_pair.
+                lrs_frac = jnp.mean(jnp.abs(jax.lax.stop_gradient(wq)))
                 p_pair = jnp.sum(jax.lax.stop_gradient(x), axis=-1,
-                                 keepdims=True) * 0.4 * 9.0 / cin * cfg.group
+                                 keepdims=True) * lrs_frac * 9.0 / cin * cfg.group
                 std = 0.0
                 if cfg_ni.device_variation:
                     from repro.core.crossbar import variation_noise_std
@@ -167,22 +180,18 @@ class IRCDetector:
         return self._gconv_structural(blk, x, cin, cout, key=key,
                                       cfg_ni=cfg_ni, sa_extra=sa_extra)
 
-    def _gconv_structural(self, blk: PyTree, x: jax.Array, cin: int,
-                          cout: int, *, key: jax.Array,
-                          cfg_ni: ni.NonidealConfig,
-                          sa_extra: float = 0.0) -> jax.Array:
-        """Full crossbar sim: im2col per group -> mapped planes -> SA bits."""
+    def group_mappings(self, blk: PyTree, cin: int, cout: int) -> List:
+        """Per-group `MappedLayer`s of one block (static per deployment).
+
+        Shared by the single-chip structural path and the chip-ensemble
+        builder (`repro.mc.detector_mc`): im2col row order is spatial-major,
+        rows = (9, group), plus the scheme's bias / in-memory-BN rows.
+        """
         cfg, spec = self.cfg, self.spec
         n_groups = cout // cfg.group
-        B, H, W, _ = x.shape
-        patches = jax.lax.conv_general_dilated_patches(
-            x, (3, 3), (1, 1), "SAME",
-            dimension_numbers=("NHWC", "HWIO", "NHWC"))   # [B,H,W,cin*9]
-        patches = patches.reshape(B, H, W, cin, 9)
-        xg = patches.reshape(B, H, W, n_groups, cfg.group, 9)
         wq = jax.lax.stop_gradient(self._gconv_weights(blk, cin, cout))
         wq = wq.reshape(9, cfg.group, cfg.group, n_groups)
-        outs = []
+        mappeds = []
         for g in range(n_groups):
             w_flat = wq[..., g].reshape(9 * cfg.group, cfg.group)
             if cfg.scheme == "ternary":
@@ -197,35 +206,101 @@ class IRCDetector:
                         bn["mean"][sl], bn["var"][sl])
                 mapped = binary_planes(w_flat, bn_bias_units=bn_units,
                                        spec=spec)
-            # im2col ordering: mapped rows are spatial-major (9, group)
-            x_bits = xg[..., g, :, :].transpose(0, 1, 2, 4, 3).reshape(
-                B, H, W, 9 * cfg.group)
+            mappeds.append(mapped)
+        return mappeds
+
+    def _im2col_groups(self, x: jax.Array, cin: int, n_groups: int
+                       ) -> jax.Array:
+        """[..., H, W, cin] {0,1} activations -> [..., H, W, n_groups,
+        9*group] word-line patterns (spatial-major rows, matching
+        `group_mappings`).  Leading dims beyond the batch (e.g. a chips
+        axis) pass through untouched."""
+        cfg = self.cfg
+        lead = x.shape[:-3]
+        H, W = x.shape[-3:-1]
+        flat = x.reshape((-1,) + x.shape[-3:])
+        patches = jax.lax.conv_general_dilated_patches(
+            flat, (3, 3), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))   # [N,H,W,cin*9]
+        patches = patches.reshape(lead + (H, W, cin, 9))
+        xg = patches.reshape(lead + (H, W, n_groups, cfg.group, 9))
+        return jnp.swapaxes(xg, -1, -2).reshape(
+            lead + (H, W, n_groups, 9 * cfg.group))
+
+    def _gconv_structural(self, blk: PyTree, x: jax.Array, cin: int,
+                          cout: int, *, key: jax.Array,
+                          cfg_ni: ni.NonidealConfig,
+                          sa_extra: float = 0.0) -> jax.Array:
+        """Full crossbar sim: im2col per group -> mapped planes -> SA bits."""
+        cfg, spec = self.cfg, self.spec
+        n_groups = cout // cfg.group
+        B, H, W, _ = x.shape
+        xg = self._im2col_groups(x, cin, n_groups)     # [B,H,W,ng,540]
+        outs = []
+        for g, mapped in enumerate(self.group_mappings(blk, cin, cout)):
             out = crossbar_forward(jax.random.fold_in(key, g),
-                                   x_bits.reshape(B * H * W, -1), mapped,
-                                   cfg=cfg_ni, spec=spec,
+                                   xg[..., g, :].reshape(B * H * W, -1),
+                                   mapped, cfg=cfg_ni, spec=spec,
                                    accumulation=cfg.accumulation,
                                    partial_rows=cfg.partial_rows,
                                    sa_extra_units=sa_extra)
             outs.append(out.reshape(B, H, W, cfg.group))
         return jnp.concatenate(outs, axis=-1)
 
+    def _gconv_ensemble(self, groups, x: jax.Array, cin: int, cout: int, *,
+                        cfg_ni: ni.NonidealConfig,
+                        sa_extra: float = 0.0) -> jax.Array:
+        """Ensemble-mode group conv: one vmapped `ensemble_apply` per group
+        services every chip of a `DetectorEnsemble` layer.
+
+        x is [B,H,W,cin] (chip-shared input — the first IRC layer; the
+        chip-shared activated-LRS counts hoist out of the chips vmap) or
+        [chips,B,H,W,cin] (chip-diverged activations downstream).  Returns
+        [chips,B,H,W,cout]; chip `c` is bit-identical to the single-chip
+        structural path with the corresponding folded key.
+        """
+        from repro.mc.engine import ensemble_apply   # lazy: mc builds on models
+        cfg = self.cfg
+        n_groups = cout // cfg.group
+        per_chip = x.ndim == 5
+        B, H, W = x.shape[-4], x.shape[-3], x.shape[-2]
+        xg = self._im2col_groups(x, cin, n_groups)
+        outs = []
+        for g, ens in enumerate(groups):
+            x_bits = xg[..., g, :].reshape(
+                (x.shape[0], -1, 9 * cfg.group) if per_chip
+                else (-1, 9 * cfg.group))
+            out = ensemble_apply(ens, x_bits, cfg=cfg_ni, spec=self.spec,
+                                 accumulation=cfg.accumulation,
+                                 partial_rows=cfg.partial_rows,
+                                 sa_extra_units=sa_extra,
+                                 per_chip_x=per_chip)
+            outs.append(out.reshape(out.shape[0], B, H, W, cfg.group))
+        return jnp.concatenate(outs, axis=-1)
+
     # ------------------------------------------------------------ BN calib
     def calibrate_bn(self, params: PyTree, images: jax.Array,
                      key: Optional[jax.Array] = None) -> PyTree:
-        """Populate BN running stats from a calibration batch (baseline
-        design): the in-memory BN mapping folds mean/var into bias cells at
-        deployment, so they must reflect the trained activations.  No-op for
-        the BN-free proposed design."""
-        if not self.cfg.use_bn:
-            return params
+        """Populate BN running stats from a calibration batch.
+
+        BOTH designs need the digital stem's running stats: eval mode
+        normalizes with them (batch statistics at eval would tie outputs to
+        batch composition).  The baseline additionally stores each block's
+        in-memory BN stats, which `binary_planes` folds into bias cells at
+        deployment; the block propagation uses |gamma|, matching the
+        sign-preserving fold of the train path and the mapping.
+        """
         cfg = self.cfg
-        key = key if key is not None else jax.random.PRNGKey(0)
         params = jax.tree.map(lambda x: x, params)  # shallow copy
         x = jax.lax.conv_general_dilated(
             images.astype(cfg.dtype), params["stem"], (2, 2), "SAME",
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
-        bn = params["stem_bn"]
+        bn = dict(params["stem_bn"])
         mu, var = jnp.mean(x, (0, 1, 2)), jnp.var(x, (0, 1, 2))
+        bn["mean"], bn["var"] = mu, var
+        params["stem_bn"] = bn
+        if not cfg.use_bn:
+            return params
         x = binary_activation(bn["gamma"] * (x - mu) / jnp.sqrt(var + 1e-5)
                               + bn["beta"])
         for s, (ch, nb) in enumerate(zip(cfg.stage_channels,
@@ -249,8 +324,8 @@ class IRCDetector:
                 bnp["mean"], bnp["var"] = mu, var
                 blk["bn"] = bnp
                 params[f"s{s}b{b}"] = blk
-                pre = (bnp["gamma"] * (pre - mu) / jnp.sqrt(var + 1e-5)
-                       + bnp["beta"])
+                pre = (jnp.abs(bnp["gamma"]) * (pre - mu)
+                       / jnp.sqrt(var + 1e-5) + bnp["beta"])
                 x = binary_activation(pre)
             x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
                                       (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
@@ -260,16 +335,29 @@ class IRCDetector:
     def apply(self, params: PyTree, images: jax.Array, *, mode: str = "train",
               key: Optional[jax.Array] = None,
               cfg_ni: ni.NonidealConfig = ni.NonidealConfig.none(),
-              sa_extra: float = 0.0) -> jax.Array:
-        """images [B,H,W,3] in [0,1] -> head predictions [B,gh,gw,A*(5+C)]."""
+              sa_extra: float = 0.0, ensemble=None) -> jax.Array:
+        """images [B,H,W,3] in [0,1] -> head predictions [B,gh,gw,A*(5+C)].
+
+        mode="train": differentiable QAT; mode="eval": single-chip structural
+        sim (chip identity = `key`); mode="ensemble": every chip of a
+        pre-sampled `repro.mc.DetectorEnsemble` at once — returns
+        [chips,B,gh,gw,A*(5+C)], chip `c` bit-identical to mode="eval" with
+        key `fold_in(base_key, c)`.
+        """
         cfg = self.cfg
         key = key if key is not None else jax.random.PRNGKey(0)
         x = jax.lax.conv_general_dilated(
             images.astype(cfg.dtype), params["stem"], (2, 2), "SAME",
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
         bn = params["stem_bn"]
-        mu = jnp.mean(x, axis=(0, 1, 2))
-        var = jnp.var(x, axis=(0, 1, 2))
+        if mode == "train":
+            mu = jnp.mean(x, axis=(0, 1, 2))
+            var = jnp.var(x, axis=(0, 1, 2))
+        else:
+            # eval/ensemble: running stats from `calibrate_bn` — batch
+            # statistics here would make deployed outputs depend on batch
+            # composition (and MC chunking would change the metric)
+            mu, var = bn["mean"], bn["var"]
         x = bn["gamma"] * (x - mu) / jnp.sqrt(var + 1e-5) + bn["beta"]
         x = binary_activation(x)
 
@@ -281,11 +369,16 @@ class IRCDetector:
                 if cin < ch:   # widen by repetition before the block
                     x = jnp.concatenate([x] * (ch // cin), axis=-1)
                     cin = ch
-                x = self._gconv(params[f"s{s}b{b}"], x, cin, ch, mode=mode,
-                                key=jax.random.fold_in(key, s * 10 + b),
-                                cfg_ni=cfg_ni, sa_extra=sa_extra)
-            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
-                                      (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
-        B, gh, gw, chn = x.shape
-        head = x.reshape(B, gh, gw, chn) @ params["head"] + params["head_b"]
-        return head
+                if mode == "ensemble":
+                    x = self._gconv_ensemble(
+                        ensemble.layers[f"s{s}b{b}"], x, cin, ch,
+                        cfg_ni=cfg_ni, sa_extra=sa_extra)
+                else:
+                    x = self._gconv(params[f"s{s}b{b}"], x, cin, ch,
+                                    mode=mode,
+                                    key=jax.random.fold_in(key, s * 10 + b),
+                                    cfg_ni=cfg_ni, sa_extra=sa_extra)
+            wd = (1,) * (x.ndim - 3) + (2, 2, 1)
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, wd, wd,
+                                      "SAME")
+        return x @ params["head"] + params["head_b"]

@@ -163,3 +163,20 @@ def evaluate_map(preds: np.ndarray, gt_boxes: List[np.ndarray],
             ap += p / 11
         aps.append(ap)
     return float(np.mean(aps)) if aps else 0.0
+
+
+def evaluate_map_per_chip(preds, gt_boxes: List[np.ndarray],
+                          gt_classes: List[np.ndarray], n_anchors: int,
+                          n_classes: int, iou_thresh: float = 0.5
+                          ) -> np.ndarray:
+    """[chips, B, gh, gw, A*(5+C)] head outputs -> [chips] mAP@0.5.
+
+    The host-side metric callback of the chip-ensemble MC engine: NMS and AP
+    are not array programs, so each chunk's predictions come back to the host
+    and every chip's mAP folds into the streaming Welford/quantile
+    accumulators (Table II's actual metric over a chip population).
+    """
+    preds = np.asarray(preds)
+    return np.array([evaluate_map(p, gt_boxes, gt_classes, n_anchors,
+                                  n_classes, iou_thresh) for p in preds],
+                    np.float32)

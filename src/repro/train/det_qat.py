@@ -1,0 +1,41 @@
+"""Short detector QAT loop shared by the MC CLI and the benchmark tables.
+
+One jitted AdamW step over the synthetic detection batches — enough training
+for population-mAP sweeps to be ordering-meaningful on smoke geometries.
+The paper-scale driver (`examples/train_detector.py`) keeps its own richer
+loop (LR schedule, noise-aware QAT, logging); this helper exists so the
+CLI/benchmark call sites don't each carry a drifting copy of the same step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.train.det_loss import yolo_loss
+
+
+def quick_qat(det, data, steps: int, batch: int, *, lr: float = 3e-3,
+              weight_decay: float = 1e-3, seed: int = 0, data_seed: int = 1):
+    """Train `det` for `steps` AdamW steps on `data` and return params."""
+    params = det.init(jax.random.PRNGKey(seed))
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(weight_decay=weight_decay)
+
+    @jax.jit
+    def step(params, opt, images, targets, k):
+        def loss_fn(p):
+            pred = det.apply(p, images, mode="train", key=k)
+            return yolo_loss(pred, targets, det.cfg.n_anchors,
+                             det.cfg.n_classes)
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt, _ = adamw_update(grads, opt, params, jnp.float32(lr),
+                                      ocfg)
+        return params, opt, loss
+
+    for s in range(steps):
+        b = data.batch_for_step(s, batch)
+        params, opt, _ = step(params, opt, b.images, b.targets,
+                              jax.random.fold_in(
+                                  jax.random.PRNGKey(data_seed), s))
+    return params

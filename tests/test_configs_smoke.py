@@ -153,11 +153,14 @@ class TestDetectorSmoke:
 
     def test_train_eval_consistency_ideal(self):
         """With no nonideal effects, the structural crossbar eval computes
-        the same function as the digital train path (up to 0-current ties)."""
+        the same function as the digital train path (up to 0-current ties).
+        Eval normalizes the stem with running stats, so calibrate on the
+        same batch the train path sees."""
         cfg = yolo_irc.smoke("ternary")
         det = IRCDetector(cfg)
         params = det.init(jax.random.PRNGKey(0))
         img = jax.random.uniform(jax.random.PRNGKey(1), (1, 32, 32, 3))
+        params = det.calibrate_bn(params, img)
         tr = det.apply(params, img, mode="train", key=jax.random.PRNGKey(2))
         ev = det.apply(params, img, mode="eval", key=jax.random.PRNGKey(2))
         # head outputs are smooth functions of the binary feature maps;

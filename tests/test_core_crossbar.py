@@ -233,3 +233,67 @@ class TestIRCLinear:
         w_q = jax.lax.stop_gradient(lin.quantized_weights(params))
         ref = ideal_ternary_matmul((x > 0).astype(jnp.float32), w_q)
         np.testing.assert_allclose(np.asarray(d), np.asarray(ref), atol=1e-3)
+
+
+class TestMultiTileSensing:
+    """Regression: multi-tile layers must NOT silently drop the SA periphery
+    (offset, stochastic variation, sensing-range clamp) — each macro's
+    front-end applies to its own partial difference before the digital
+    combine."""
+
+    def _lin(self, fan_out=6):
+        small_spec = MacroSpec(rows=128)
+        lin = IRCLinear(IRCLinearConfig(fan_in=300, fan_out=fan_out,
+                                        bias_rows=8), spec=small_spec)
+        params = lin.init(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (16, 300))
+        return lin, params, x, small_spec
+
+    @pytest.mark.parametrize("cfg", [
+        NonidealConfig(sa_variation=True),
+        NonidealConfig(sensing_range=True),
+        NonidealConfig(sa_variation=True, sensing_range=True)])
+    def test_sa_effects_not_dropped(self, cfg):
+        lin, params, x, _ = self._lin()
+        assert len(lin.map_to_planes(params)) > 1   # actually multi-tile
+        key = jax.random.PRNGKey(2)
+        out_none = lin.apply(params, x, key=key, mode="eval",
+                             cfg=NonidealConfig.none())
+        out_cfg = lin.apply(params, x, key=key, mode="eval", cfg=cfg)
+        assert not np.array_equal(np.asarray(out_none), np.asarray(out_cfg))
+
+    def test_matches_per_tile_sensed_reference(self):
+        """The layer output == per-tile `sensed_diff` outputs combined
+        digitally and thresholded (pins the per-tile sensing model)."""
+        lin, params, x, spec = self._lin()
+        cfg = NonidealConfig.all()
+        key = jax.random.PRNGKey(3)
+        out = lin.apply(params, x, key=key, mode="eval", cfg=cfg,
+                        sa_extra_units=1.0)
+        x_bits = (x > 0).astype(jnp.float32)
+        total, offset = 0.0, 0
+        for t, tile in enumerate(lin.map_to_planes(params)):
+            lead = tile.rows - tile.fan_in
+            x_t = x_bits[..., offset:offset + tile.rows - lead]
+            offset += tile.rows - lead
+            total = total + crossbar_forward(
+                jax.random.fold_in(key, t), x_t, tile, cfg=cfg, spec=spec,
+                sa_extra_units=1.0, output="sensed_diff")
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray((total > 0).astype(jnp.float32)))
+
+    def test_single_tile_sensed_diff_matches_resolve_sa(self):
+        """Thresholding one tile's sensed difference at zero reproduces the
+        binary SA decisions bit-for-bit (same key discipline)."""
+        w = ternary_quantize(jax.random.normal(jax.random.PRNGKey(4),
+                                               (200, 12)))
+        x = (jax.random.uniform(jax.random.PRNGKey(5), (32, 200)) > 0.5
+             ).astype(jnp.float32)
+        mapped = ternary_planes(w, bias_rows=16)
+        cfg = NonidealConfig.all()
+        key = jax.random.PRNGKey(6)
+        bits = crossbar_forward(key, x, mapped, cfg=cfg)
+        sensed = crossbar_forward(key, x, mapped, cfg=cfg,
+                                  output="sensed_diff")
+        np.testing.assert_array_equal(
+            np.asarray(bits), np.asarray((sensed > 0).astype(jnp.float32)))

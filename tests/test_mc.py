@@ -131,6 +131,32 @@ class TestEnsembleConsistency:
                                    partial_rows=212)
             np.testing.assert_array_equal(np.asarray(out[c]), np.asarray(ref))
 
+    @pytest.mark.parametrize("output", ["binary", "diff", "sensed_diff"])
+    def test_output_modes_match_single_chip(self, output):
+        """Every output mode forwards through BOTH the hoisted shared-planes
+        branch and the per-chip-x branch consistently with crossbar_forward:
+        SA decisions bit-for-bit; analog readouts up to the round-off of
+        batched-vs-unbatched einsum lowering (the stochastic terms — offset
+        draws, range-failure signs — are PRNG-exact either way)."""
+        _, mapped, x = _layer(fan_in=96, n_out=16, batch=8)
+        cfg = NonidealConfig.all()
+        key = jax.random.PRNGKey(31)
+        ens = sample_ensemble(key, mapped, 3, cfg=cfg)
+        shared = ensemble_apply(ens, x, cfg=cfg, output=output)
+        per_chip = ensemble_apply(
+            ens, jnp.broadcast_to(x, (3,) + x.shape), cfg=cfg, output=output,
+            per_chip_x=True)
+        for c in range(3):
+            ref = crossbar_forward(jax.random.fold_in(key, c), x, mapped,
+                                   cfg=cfg, output=output)
+            for out in (shared[c], per_chip[c]):
+                if output == "binary":
+                    np.testing.assert_array_equal(np.asarray(out),
+                                                  np.asarray(ref))
+                else:
+                    np.testing.assert_allclose(np.asarray(out),
+                                               np.asarray(ref), atol=1e-4)
+
     def test_kernel_backend_matches_single_kernel_loop(self):
         _, mapped, x = _layer(batch=8)
         cfg = NonidealConfig.all()
@@ -225,6 +251,27 @@ class TestRunMc:
         agree = {k: v.metrics["bit_agreement"]["mean"]
                  for k, v in res.items()}
         assert agree["ideal"] >= agree["devvar"] >= agree["all"] - 1e-6
+
+    def test_host_metric_callback_streams_per_chunk(self):
+        """Host-side callbacks (e.g. evaluate_map — not an array program)
+        see each chunk's outputs on the host and fold into the same
+        streaming accumulators as on-device metrics."""
+        w, mapped, x = _layer(fan_in=96, n_out=16, batch=8)
+        ref = (ideal_ternary_matmul(x, w) > 0).astype(jnp.float32)
+        shapes = []
+
+        def host_ones(out_np):
+            shapes.append(out_np.shape)
+            return out_np.mean(axis=(1, 2))
+
+        res = run_mc(jax.random.PRNGKey(5), mapped, x, ref_bits=ref,
+                     mc=McConfig(n_chips=6, chunk_size=3),
+                     host_metric_fns={"host_ones": host_ones})
+        assert shapes == [(3, 8, 16), (3, 8, 16)]
+        np.testing.assert_allclose(res.per_chip["host_ones"],
+                                   res.per_chip["ones_fraction"], atol=1e-6)
+        m = res.metrics["host_ones"]
+        assert m["count"] == 6.0 and "q50" in m
 
     def test_sharded_run_matches_unsharded(self):
         from repro.launch.mesh import make_host_mesh
