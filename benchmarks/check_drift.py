@@ -1,0 +1,81 @@
+"""CI benchmark-drift gate for the MC/QAT pipeline.
+
+Re-runs the smoke-geometry throughput benches (`benchmarks.mc_bench`) and
+fails if any tracked metric regresses more than ``DRIFT_FACTOR``x against the
+committed ``BENCH_mc.json`` baselines.
+
+Every gated metric is MACHINE-RELATIVE — the ensemble engine's speedup over
+the same run's python-loop baseline, and the ensemble-QAT step's scaling
+over the same run's single-chip step — so a runner that is merely slower
+than the box that committed the baselines does not trip the gate, while the
+regressions that matter here do: lost jit caching, an accidental python
+loop over chips, per-step retracing of the ensemble step.  The flip side of
+ratio gating: a PR that speeds up only the DENOMINATOR leg >2.5x (e.g. a
+much faster python-loop `crossbar_forward` or single-chip step) shrinks the
+ratio just like a regression would — such a PR should re-run
+`benchmarks.run --only mc_` and commit the refreshed `BENCH_mc.json`
+baselines alongside the optimization.
+
+  PYTHONPATH=src python -m benchmarks.check_drift
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+DRIFT_FACTOR = 2.5
+
+
+def _metrics(record: dict) -> dict:
+    """Machine-relative throughput metrics from a BENCH_mc.json tree.
+    Missing sections simply drop out (only keys present in BOTH the
+    committed baseline and the fresh run are compared, so adding benches
+    never breaks CI)."""
+    out = {}
+    if "speedup_vs_loop" in record:
+        out["layer_engine_speedup_vs_loop"] = record["speedup_vs_loop"]
+    det = record.get("detector", {})
+    if "speedup_vs_loop" in det:
+        out["detector_engine_speedup_vs_loop"] = det["speedup_vs_loop"]
+    step_us = record.get("qat", {}).get("step_us", {})
+    if "1" in step_us and "4" in step_us:
+        # chips=4 step cost relative to the single-draw step: the ensemble
+        # path's own overhead factor, independent of runner speed
+        out["qat_step_4chip_scale"] = 1.0 / (step_us["4"] / step_us["1"])
+    return out   # all higher-is-better
+
+
+def main() -> None:
+    from benchmarks import mc_bench
+
+    if not mc_bench.BENCH_JSON.exists():
+        print("# no committed BENCH_mc.json baseline; nothing to gate")
+        return
+    baseline = _metrics(json.loads(mc_bench.BENCH_JSON.read_text()))
+
+    # fresh run (rewrites BENCH_mc.json in the workspace — baseline captured
+    # above; CI never commits the rewrite)
+    for bench in (mc_bench.mc_engine_bench, mc_bench.detector_mc_bench,
+                  mc_bench.qat_step_bench):
+        for name, us, derived in bench():
+            print(f"{name},{us:.1f},{derived}", flush=True)
+    fresh = _metrics(json.loads(mc_bench.BENCH_JSON.read_text()))
+
+    failures = []
+    for name in sorted(baseline.keys() & fresh.keys()):
+        ratio = baseline[name] / fresh[name]
+        verdict = "FAIL" if ratio > DRIFT_FACTOR else "ok"
+        print(f"# drift {name}: baseline={baseline[name]:.2f} "
+              f"fresh={fresh[name]:.2f} regression={ratio:.2f}x [{verdict}]")
+        if ratio > DRIFT_FACTOR:
+            failures.append(name)
+    for name in sorted(baseline.keys() - fresh.keys()):
+        print(f"# drift {name}: skipped (absent from fresh run)")
+    if failures:
+        print(f"# benchmark drift >{DRIFT_FACTOR}x on: {', '.join(failures)}",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -101,7 +101,9 @@ def mc_engine_bench() -> List[Row]:
 
 
 def _merge_bench_json(record: dict, section: str = "") -> None:
-    """Update BENCH_mc.json without clobbering the other bench's section."""
+    """Update BENCH_mc.json without clobbering the other benches' sections
+    (a named section merges key-by-key: the QAT step-timing bench and the
+    population-comparison table both write into "qat")."""
     existing = {}
     if BENCH_JSON.exists():
         try:
@@ -109,7 +111,7 @@ def _merge_bench_json(record: dict, section: str = "") -> None:
         except json.JSONDecodeError:
             existing = {}
     if section:
-        existing[section] = record
+        existing.setdefault(section, {}).update(record)
     else:
         existing.update(record)
     BENCH_JSON.write_text(json.dumps(existing, indent=1))
@@ -179,4 +181,59 @@ def detector_mc_bench() -> List[Row]:
     ]
 
 
-ALL = [mc_engine_bench, detector_mc_bench]
+# ensemble-QAT step timing: smoke geometry, small batch — the chips axis is
+# folded into the batch, so step time should scale sub-linearly to linearly
+# in train_chips (shared-placement count hoisting + one conv for all chips)
+QAT_CHIPS = (1, 2, 4)
+QAT_BATCH = 4
+
+
+def qat_step_bench() -> List[Row]:
+    """Step time of the detector QAT step vs `train_chips` (the cost knob of
+    ensemble-aware QAT).  train_chips=1 is the legacy single-draw step, so
+    the chips=1 row doubles as the QAT-throughput drift baseline."""
+    from repro.configs import yolo_irc
+    from repro.data.detection import SyntheticDetectionData
+    from repro.models import IRCDetector
+    from repro.optim import adamw_init
+    from repro.train.steps import ensemble_key_for_step, make_det_qat_step
+
+    cfg_det = yolo_irc.smoke("ternary")
+    det = IRCDetector(cfg_det)
+    data = SyntheticDetectionData(img_hw=cfg_det.img_hw,
+                                  stride=cfg_det.strides,
+                                  n_classes=cfg_det.n_classes,
+                                  n_anchors=cfg_det.n_anchors)
+    b = data.batch_for_step(0, QAT_BATCH)
+    params = det.init(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    noise = NonidealConfig.all()
+    key = jax.random.PRNGKey(1)
+    lr = jnp.float32(3e-3)
+
+    rows: List[Row] = []
+    hw = f"{cfg_det.img_hw[0]}x{cfg_det.img_hw[1]}"
+    record = {"batch": QAT_BATCH, "img_hw": list(cfg_det.img_hw),
+              "step_us": {}}
+    base_us = None
+    for c in QAT_CHIPS:
+        step = jax.jit(make_det_qat_step(det, train_chips=c, cfg_ni=noise))
+        ek = ensemble_key_for_step(key, 0)
+        jax.block_until_ready(step(params, opt, b.images, b.targets, lr,
+                                   key, ek)[0])       # compile
+        times = []
+        for i in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(step(params, opt, b.images, b.targets, lr,
+                                       jax.random.fold_in(key, i), ek)[0])
+            times.append(time.perf_counter() - t0)
+        us = sorted(times)[len(times) // 2] * 1e6
+        record["step_us"][str(c)] = us
+        base_us = us if base_us is None else base_us
+        rows.append((f"qat_step_chips{c}_{hw}_b{QAT_BATCH}", us,
+                     f"per_step;scale_vs_1chip={us / base_us:.2f}x"))
+    _merge_bench_json(record, section="qat")
+    return rows
+
+
+ALL = [mc_engine_bench, detector_mc_bench, qat_step_bench]

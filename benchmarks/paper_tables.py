@@ -15,7 +15,7 @@ from typing import List, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import (DEFAULT_MACRO, MacroSpec, NonidealConfig,
+from repro.core import (MacroSpec, NonidealConfig,
                         nonlinearity_ratio, sa_required_diff,
                         ternary_quantize, binary_quantize, ternary_planes,
                         binary_planes, crossbar_forward, ideal_ternary_matmul,
@@ -104,8 +104,8 @@ def table1_sensing() -> List[Row]:
 
 
 # the Table II column set is owned by repro.mc (the CLI and ensemble sweeps
-# use the same list)
-from repro.mc import TABLE2_ABLATION as _ABLATION
+# use the same list); imported mid-file to keep the paper-narrative ordering
+from repro.mc import TABLE2_ABLATION as _ABLATION  # noqa: E402
 
 
 def table2_ablation_proxy() -> List[Row]:
@@ -196,6 +196,55 @@ def table2_detector_map() -> List[Row]:
     return rows
 
 
+def table2_ensemble_qat() -> List[Row]:
+    """Table-II-style population comparison of the QAT surrogates: mean±std
+    mAP@0.5 over a chip population for a SINGLE-DRAW-trained vs an
+    ENSEMBLE-trained checkpoint (same root key, same surrogate-noise config,
+    same step count — the chips axis is the only difference).  Persists the
+    numbers into BENCH_mc.json's "qat" section next to the step timings."""
+    import time as _time
+    import jax.random as jrandom
+    from repro.configs import yolo_irc
+    from repro.data.detection import SyntheticDetectionData
+    from repro.models import IRCDetector
+    from repro.train.det_qat import quick_qat
+    from repro.mc import McConfig, run_mc_detector
+    from benchmarks.mc_bench import _merge_bench_json
+
+    cfg_det = yolo_irc.smoke("ternary")
+    det = IRCDetector(cfg_det)
+    data = SyntheticDetectionData(img_hw=cfg_det.img_hw,
+                                  stride=cfg_det.strides,
+                                  n_classes=cfg_det.n_classes,
+                                  n_anchors=cfg_det.n_anchors)
+    noise = NonidealConfig.all()
+    root = jrandom.PRNGKey(1)
+    checkpoints = {
+        "single": quick_qat(det, data, 40, 4, cfg_ni=noise, key=root),
+        "ens4": quick_qat(det, data, 40, 4, cfg_ni=noise, key=root,
+                          train_chips=4),
+    }
+    calib = data.batch_for_step(999, 16).images
+    ev = data.batch_for_step(1000, 4)
+    mc = McConfig(n_chips=8, chunk_size=8)
+    rows: List[Row] = []
+    record = {}
+    for name, params in checkpoints.items():
+        params = det.calibrate_bn(params, calib)
+        t0 = _time.perf_counter()
+        res = run_mc_detector(jrandom.PRNGKey(4), det, params, ev.images,
+                              ev.boxes, ev.classes, mc=mc)
+        us = (_time.perf_counter() - t0) * 1e6
+        m = res.metrics["map50"]
+        record[f"{name}_map50_mean"] = m["mean"]
+        record[f"{name}_map50_std"] = m["std"]
+        rows.append((f"table2_qat_{name}", us,
+                     f"map50={m['mean']:.3f}±{m['std']:.3f};"
+                     f"chips={mc.n_chips};qat_steps=40"))
+    _merge_bench_json(record, section="qat")
+    return rows
+
+
 def table4_tolerance() -> List[Row]:
     """Tolerance limits: device sigma sweep + SA variation margin sweep."""
     import dataclasses
@@ -221,4 +270,4 @@ def table4_tolerance() -> List[Row]:
 
 ALL = [fig7_nonlinearity, fig9_sa_variation, fig14_wl_voltage,
        table1_sensing, table2_ablation_proxy, table2_mc_ensemble,
-       table2_detector_map, table4_tolerance]
+       table2_detector_map, table2_ensemble_qat, table4_tolerance]

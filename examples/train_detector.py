@@ -15,15 +15,15 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import yolo_irc
 from repro.core import NonidealConfig
 from repro.data.detection import SyntheticDetectionData
 from repro.models import IRCDetector
-from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_step_decay
-from repro.train.det_loss import yolo_loss, evaluate_map
+from repro.optim import AdamWConfig, adamw_init, warmup_step_decay
+from repro.train.det_loss import evaluate_map
+from repro.train.steps import ensemble_key_for_step, make_det_qat_step
 
 ABLATION = [
     ("ideal", NonidealConfig.none()),
@@ -35,21 +35,22 @@ ABLATION = [
 ]
 
 
-def train(det, data, steps, batch, lr, seed=0, noise_cfg=NonidealConfig.none()):
+def train(det, data, steps, batch, lr, seed=0, noise_cfg=NonidealConfig.none(),
+          train_chips=1, resample_every=1, key=None):
+    """QAT on the shared step builder (`repro.train.steps.make_det_qat_step`).
+
+    `train_chips=1` is the legacy single-draw surrogate; >=2 trains against a
+    chip population (ensemble-aware QAT, paper Sec. V at population scale).
+    `key` roots BOTH the per-step noise stream and the chip-population
+    stream, so a run is reproducible from one key (defaults to the
+    historical PRNGKey(1)).
+    """
     params = det.init(jax.random.PRNGKey(seed))
     opt = adamw_init(params)
-    ocfg = AdamWConfig(weight_decay=1e-3)   # paper: AdamW, wd=1e-3
-
-    @jax.jit
-    def step_fn(params, opt, images, targets, key, lr):
-        def loss_fn(p):
-            pred = det.apply(p, images, mode="train", key=key,
-                             cfg_ni=noise_cfg)
-            return yolo_loss(pred, targets, det.cfg.n_anchors,
-                             det.cfg.n_classes)
-        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
-        params, opt, _ = adamw_update(grads, opt, params, lr, ocfg)
-        return params, opt, loss
+    step_fn = jax.jit(make_det_qat_step(
+        det, train_chips=train_chips, cfg_ni=noise_cfg,
+        opt_cfg=AdamWConfig(weight_decay=1e-3)))   # paper: AdamW, wd=1e-3
+    root = jax.random.PRNGKey(1) if key is None else key
 
     t0 = time.time()
     for s in range(steps):
@@ -57,9 +58,10 @@ def train(det, data, steps, batch, lr, seed=0, noise_cfg=NonidealConfig.none()):
         lr_s = warmup_step_decay(s, base_lr=lr, warmup_steps=max(steps // 10, 1),
                                  decay_points=((int(steps * 0.7), lr / 10),
                                                (int(steps * 0.9), lr / 100)))
-        params, opt, loss = step_fn(params, opt, b.images, b.targets,
-                                    jax.random.fold_in(jax.random.PRNGKey(1), s),
-                                    lr_s)
+        params, opt, loss = step_fn(params, opt, b.images, b.targets, lr_s,
+                                    jax.random.fold_in(root, s),
+                                    ensemble_key_for_step(root, s,
+                                                          resample_every))
         if s % max(steps // 10, 1) == 0:
             print(f"  step {s:4d}  loss {float(loss):8.4f} "
                   f"({time.time()-t0:5.1f}s)", flush=True)
@@ -94,8 +96,19 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="paper-scale 1024x576 geometry")
     ap.add_argument("--designs", default="proposed,baseline")
+    ap.add_argument("--qat-noise", action="store_true",
+                    help="variation-aware QAT: surrogate nonideal noise "
+                         "during training (paper Sec. V)")
+    ap.add_argument("--train-chips", type=int, default=1,
+                    help="ensemble-aware QAT: chip realizations per step "
+                         "(implies --qat-noise; 1 = legacy single draw)")
+    ap.add_argument("--resample-every", type=int, default=1,
+                    help="QAT steps between chip-population resamples")
     args = ap.parse_args()
 
+    noise_cfg = (NonidealConfig.all()
+                 if (args.qat_noise or args.train_chips > 1)
+                 else NonidealConfig.none())
     results = {}
     for design in args.designs.split(","):
         cfg = (yolo_irc.proposed() if design == "proposed"
@@ -106,8 +119,11 @@ def main():
                                       stride=2 ** (len(cfg.stage_channels) + 1),
                                       n_classes=cfg.n_classes,
                                       n_anchors=cfg.n_anchors)
-        print(f"\n=== {design} design: QAT ({args.steps} steps) ===")
-        params = train(det, data, args.steps, args.batch, args.lr)
+        print(f"\n=== {design} design: QAT ({args.steps} steps, "
+              f"train_chips={args.train_chips}) ===")
+        params = train(det, data, args.steps, args.batch, args.lr,
+                       noise_cfg=noise_cfg, train_chips=args.train_chips,
+                       resample_every=args.resample_every)
         # deployment step (both designs): populate the digital stem's running
         # stats — eval mode normalizes with them — and, for the baseline, the
         # block BN stats the in-memory BN fold maps into bias cells

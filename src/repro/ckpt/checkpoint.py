@@ -124,7 +124,7 @@ def restore_pytree(template: PyTree, directory: str | Path,
         arr = data[key]
         saved_dtype = meta["dtypes"].get(key, str(arr.dtype))
         if saved_dtype != str(arr.dtype):       # bit-pattern stored dtype
-            import ml_dtypes
+            import ml_dtypes  # noqa: F401  (registers bf16 etc. with numpy)
             arr = arr.view(np.dtype(saved_dtype))
         arr = arr.astype(tmpl.dtype) if hasattr(tmpl, "dtype") else arr
         if sh is not None:

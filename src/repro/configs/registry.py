@@ -1,7 +1,7 @@
 """Architecture registry: ``--arch <id>`` resolution for launch tools."""
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import List
 
 from repro.models.lm_config import LMConfig
 from repro.configs import (hymba_1p5b, phi3_medium_14b, deepseek_67b,

@@ -23,7 +23,7 @@ Accumulation modes (Sec. III-C / IV-B.3):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ for the power model and for reporting against the paper's numbers.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Tuple
 
 # (wl_voltage, unit LRS current uA, log-normal sigma of LRS current)

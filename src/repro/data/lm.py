@@ -10,7 +10,7 @@ real loss drop (used by examples/train_lm.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

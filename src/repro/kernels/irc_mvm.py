@@ -28,7 +28,6 @@ against `ref.irc_mvm_ref` (interpret=True on CPU).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ref import IrcEpilogueParams, irc_mvm_ref, ternary_matmul_ref
+# re-exported: ops is the backend-dispatch facade over the ref kernels
+from repro.kernels.ref import (IrcEpilogueParams, irc_mvm_ref,  # noqa: F401
+                               ternary_matmul_ref)
 from repro.kernels.irc_mvm import irc_mvm_pallas, irc_mvm_chips_pallas
 from repro.kernels.ternary_matmul import ternary_matmul_pallas
 from repro.kernels.flash_attention import flash_attention_pallas

@@ -27,6 +27,11 @@ Two network levels:
   # whole-detector population mAP, smoke geometry, 16 chips
   PYTHONPATH=src python -m repro.launch.mc --network detector --chips 16 \
       --det-steps 100 --ablation table2
+
+  # ensemble-aware QAT: single-draw vs 4-chip-population training, scored
+  # side by side with whole-network population mAP
+  PYTHONPATH=src python -m repro.launch.mc --network detector --chips 16 \
+      --det-steps 100 --train-chips 4
 """
 from __future__ import annotations
 
@@ -80,10 +85,39 @@ def _write_report(args, report) -> None:
     print(f"# wrote {out}")
 
 
+def _train_checkpoints(args, det, data):
+    """QAT checkpoint(s) to sweep: the legacy single path, or — with
+    --train-chips N — a single-draw vs N-chip-ensemble QAT pair trained from
+    the SAME root key with the surrogate-noise config on, so the population
+    sweep isolates what the chips axis buys (paper Sec. V)."""
+    import jax
+    from repro.core import NonidealConfig
+    if args.train_chips <= 1:
+        if args.det_steps:
+            from repro.train.det_qat import quick_qat
+            return {"qat": quick_qat(det, data, args.det_steps,
+                                     args.det_batch, seed=args.seed)}
+        return {"init": det.init(jax.random.PRNGKey(args.seed))}
+    if not args.det_steps:
+        raise SystemExit("--train-chips needs --det-steps > 0 "
+                         "(it compares QAT'd checkpoints)")
+    from repro.train.det_qat import quick_qat
+    noise = NonidealConfig.all()   # surrogate models devvar + SA of this set
+    root = jax.random.PRNGKey(args.seed + 1)
+    common = dict(seed=args.seed, key=root, cfg_ni=noise)
+    return {
+        "single": quick_qat(det, data, args.det_steps, args.det_batch,
+                            train_chips=1, **common),
+        f"ens{args.train_chips}": quick_qat(
+            det, data, args.det_steps, args.det_batch,
+            train_chips=args.train_chips,
+            resample_every=args.resample_every, **common),
+    }
+
+
 def run_detector(args) -> None:
     """Whole-network MC: population mAP@0.5 of the smoke-geometry detector."""
     import jax
-    import numpy as np
     from repro.configs import yolo_irc
     from repro.data.detection import SyntheticDetectionData
     from repro.models import IRCDetector
@@ -94,42 +128,41 @@ def run_detector(args) -> None:
     data = SyntheticDetectionData(img_hw=cfg.img_hw, stride=cfg.strides,
                                   n_classes=cfg.n_classes,
                                   n_anchors=cfg.n_anchors)
-    if args.det_steps:
-        from repro.train.det_qat import quick_qat
-        params = quick_qat(det, data, args.det_steps, args.det_batch,
-                           seed=args.seed)
-    else:
-        params = det.init(jax.random.PRNGKey(args.seed))
+    checkpoints = _train_checkpoints(args, det, data)
     # deployment calibration: stem running stats (+ baseline block BN)
     calib = data.batch_for_step(999, args.det_batch * 4)
-    params = det.calibrate_bn(params, calib.images)
     ev = data.batch_for_step(1000, args.det_batch)
 
     mc = McConfig(n_chips=args.chips, chunk_size=args.chunk)
     key = jax.random.PRNGKey(args.seed)
-    results = {}
-    for name, cfg_ni in _ablation_columns(args, TABLE2_ABLATION):
-        results[name] = run_mc_detector(
-            key, det, params, ev.images, ev.boxes, ev.classes,
-            mc=dataclasses.replace(mc, cfg=cfg_ni))
+    columns = _ablation_columns(args, TABLE2_ABLATION)
 
-    ideal_mean = results["ideal"].metrics["map50"]["mean"]
     print(f"# detector {args.det_scheme} {cfg.img_hw[0]}x{cfg.img_hw[1]} "
           f"batch={args.det_batch} chips={args.chips} "
-          f"qat_steps={args.det_steps}")
-    print("config,map50_mean,map50_std,drop_vs_ideal,q05,q50,q95,chips_per_s")
+          f"qat_steps={args.det_steps} train_chips={args.train_chips}")
+    print("checkpoint,config,map50_mean,map50_std,drop_vs_ideal,"
+          "q05,q50,q95,chips_per_s")
     report = {"args": vars(args), "results": {}}
-    for name, res in results.items():
-        m = res.metrics["map50"]
-        print(f"{name},{m['mean']:.4f},{m['std']:.4f},"
-              f"{ideal_mean - m['mean']:.4f},"
-              f"{m.get('q05', float('nan')):.4f},"
-              f"{m.get('q50', float('nan')):.4f},"
-              f"{m.get('q95', float('nan')):.4f},{res.chips_per_sec:.2f}")
-        report["results"][name] = {
-            "metrics": res.metrics, "wall_s": res.wall_s,
-            "chips_per_sec": res.chips_per_sec,
-            "per_chip_map50": res.per_chip["map50"].tolist()}
+    for ck, params in checkpoints.items():
+        params = det.calibrate_bn(params, calib.images)
+        results = {}
+        for name, cfg_ni in columns:
+            results[name] = run_mc_detector(
+                key, det, params, ev.images, ev.boxes, ev.classes,
+                mc=dataclasses.replace(mc, cfg=cfg_ni))
+        ideal_mean = results["ideal"].metrics["map50"]["mean"]
+        report["results"][ck] = {}
+        for name, res in results.items():
+            m = res.metrics["map50"]
+            print(f"{ck},{name},{m['mean']:.4f},{m['std']:.4f},"
+                  f"{ideal_mean - m['mean']:.4f},"
+                  f"{m.get('q05', float('nan')):.4f},"
+                  f"{m.get('q50', float('nan')):.4f},"
+                  f"{m.get('q95', float('nan')):.4f},{res.chips_per_sec:.2f}")
+            report["results"][ck][name] = {
+                "metrics": res.metrics, "wall_s": res.wall_s,
+                "chips_per_sec": res.chips_per_sec,
+                "per_chip_map50": res.per_chip["map50"].tolist()}
     _write_report(args, report)
 
 
@@ -147,6 +180,13 @@ def main() -> None:
                     help="detector eval batch size")
     ap.add_argument("--det-steps", type=int, default=0,
                     help="short QAT before the detector sweep (0 = random init)")
+    ap.add_argument("--train-chips", type=int, default=1,
+                    help="ensemble-aware QAT: train a second checkpoint "
+                         "against N-chip populations (surrogate noise on) and "
+                         "report population mAP for single-draw vs ensemble "
+                         "QAT side by side (needs --det-steps)")
+    ap.add_argument("--resample-every", type=int, default=1,
+                    help="QAT steps between chip-population resamples")
     ap.add_argument("--chips", type=int, default=64)
     ap.add_argument("--chunk", type=int, default=32)
     ap.add_argument("--batch", type=int, default=256)
@@ -183,6 +223,13 @@ def main() -> None:
                 f"--det-steps)")
         run_detector(args)
         return
+
+    det_only = ("train_chips", "resample_every")
+    misused = [f"--{n.replace('_', '-')}" for n in det_only
+               if getattr(args, n) != ap.get_default(n)]
+    if misused:
+        raise SystemExit(f"--network layer does not take {', '.join(misused)} "
+                         f"(detector QAT flags)")
 
     import jax
     from repro.mc import McConfig, run_mc, TABLE2_ABLATION

@@ -26,8 +26,6 @@ PERF_DIR = Path(__file__).resolve().parents[3] / "experiments" / "perf"
 
 
 def run_variant(arch: str, shape: str, variant: str, knobs: dict) -> dict:
-    import jax
-    from repro.launch import dryrun as dr
     from repro.launch.dryrun import lower_cell, probe_pair
     from repro.launch.roofline import (PEAK_FLOPS, HBM_BW, ICI_BW,
                                        _metrics, _rwkv_recurrence_flops)

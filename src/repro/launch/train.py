@@ -25,7 +25,7 @@ from repro.data import SyntheticLMData
 from repro.models import LM
 from repro.models.lm_config import IRCMode
 from repro.optim import AdamWConfig
-from repro.sharding.rules import tree_pspecs, batch_pspec
+from repro.sharding.rules import tree_pspecs
 from repro.train import make_train_step
 from repro.train.steps import init_train_state, train_state_axes
 from repro.train.trainer import Trainer, TrainerConfig

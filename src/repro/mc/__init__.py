@@ -18,12 +18,14 @@ mAP sweeps); perf: `benchmarks/mc_bench.py`.
 """
 from repro.mc.ensemble import (ChipEnsemble, sample_ensemble,
                                sample_ensemble_with_keys, chip_keys,
-                               calibrate_ensemble_bias, shard_ensemble)
+                               calibrate_ensemble_bias, shard_ensemble,
+                               deviation_planes)
 from repro.mc.engine import (McConfig, McResult, ensemble_apply,
                              ensemble_apply_kernel, run_mc, run_ablation,
                              bit_agreement_metric, ones_fraction_metric,
                              TABLE2_ABLATION)
 from repro.mc.detector_mc import (DetectorEnsemble, build_detector_ensemble,
+                                  build_train_ensemble, detector_layer_keys,
                                   run_mc_detector, run_ablation_detector)
 from repro.mc.stats import (Welford, welford_init, welford_merge,
                             welford_add_batch, welford_finalize,

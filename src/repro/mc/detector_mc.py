@@ -60,6 +60,17 @@ class DetectorEnsemble:
         return self.chip_ids.shape[0]
 
 
+def detector_layer_keys(key: jax.Array, chip_ids: jax.Array, layer_id: int,
+                        g: int) -> jax.Array:
+    """Per-chip keys of one detector (layer, group) crossbar:
+    `fold_in(fold_in(fold_in(key, c), layer_id), g)` — THE key stream shared
+    by the eval-time ensemble builder, the train-time surrogate sampler, and
+    the single-chip structural path (`IRCDetector.apply(mode="eval")` folds
+    the same layer_id = s*10+b and group g)."""
+    return jax.vmap(lambda i: jax.random.fold_in(
+        jax.random.fold_in(jax.random.fold_in(key, i), layer_id), g))(chip_ids)
+
+
 def build_detector_ensemble(key: jax.Array, det, params, n_chips: int = 0, *,
                             chip_ids: Optional[jax.Array] = None,
                             cfg: ni.NonidealConfig = ni.NonidealConfig.all(),
@@ -83,14 +94,37 @@ def build_detector_ensemble(key: jax.Array, det, params, n_chips: int = 0, *,
             groups = []
             for g, mapped in enumerate(det.group_mappings(params[name],
                                                           cin, ch)):
-                layer_id = s * 10 + b
-                keys = jax.vmap(lambda i: jax.random.fold_in(
-                    jax.random.fold_in(jax.random.fold_in(key, i),
-                                       layer_id), g))(chip_ids)
+                keys = detector_layer_keys(key, chip_ids, s * 10 + b, g)
                 groups.append(sample_ensemble_with_keys(
                     keys, mapped, chip_ids=chip_ids, cfg=cfg, spec=det.spec))
             layers[name] = tuple(groups)
     return DetectorEnsemble(layers=layers, chip_ids=chip_ids)
+
+
+def build_train_ensemble(key: jax.Array, det, params, n_chips: int, *,
+                         chip_ids: Optional[jax.Array] = None,
+                         cfg: ni.NonidealConfig = ni.NonidealConfig.all(),
+                         ) -> DetectorEnsemble:
+    """Train-time chip population: per-layer DEVIATION planes, no eval-only
+    extras (per-die bias calibration, sensing periphery state).
+
+    Same plane sampling and `detector_layer_keys` stream as the eval builder
+    — chip `c` here IS chip `c` of `build_detector_ensemble` — but each
+    layer's ChipEnsemble carries (effective - nominal) conductance deltas
+    (`deviation_planes`), so `mode="train_ensemble"` can add each chip's
+    frozen linear variation error to the differentiable QAT pre-activation.
+    Everything inside is jit-traceable: the QAT step rebuilds the planes from
+    the CURRENT quantized weights every step while the chip identity (the
+    variation masks' keys) advances only when the caller advances `key`
+    (`resample_every` scheduling lives in `repro.train.steps`).
+    """
+    from repro.mc.ensemble import deviation_planes
+    ens = build_detector_ensemble(key, det, params, n_chips,
+                                  chip_ids=chip_ids, cfg=cfg)
+    return DetectorEnsemble(
+        layers={name: tuple(deviation_planes(g, det.spec) for g in groups)
+                for name, groups in ens.layers.items()},
+        chip_ids=ens.chip_ids)
 
 
 @functools.partial(jax.jit, static_argnames=("det_cfg", "spec", "cfg_ni",

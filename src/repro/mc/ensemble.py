@@ -145,6 +145,34 @@ def shard_ensemble(ens: ChipEnsemble, mesh) -> ChipEnsemble:
         bias_units=put(ens.bias_units))
 
 
+def deviation_planes(ens: ChipEnsemble, spec: MacroSpec = DEFAULT_MACRO
+                     ) -> ChipEnsemble:
+    """The ensemble with ep/en replaced by (effective - nominal) conductance
+    DELTAS, for the train-time surrogate.
+
+    The nominal planes are what a variation-free chip carries (LRS cells at
+    unit conductance plus the HRS leak floor), so
+    `ensemble_apply(deviation_planes(ens), x, cfg=none, output="diff")` is
+    each chip's FROZEN current-difference deviation — exactly the linear
+    device-variation error the structural sim would add on that die, with no
+    per-read stochastic terms.  Ensemble-aware QAT adds this (stop-gradient)
+    to the ideal pre-activation instead of the legacy i.i.d. noise draw.
+    With `device_variation` off at sampling time the deltas are exactly zero.
+
+    Only meaningful on an UNCALIBRATED ensemble (per-die bias masking floors
+    conductances irreversibly, so deltas would mix calibration into the
+    surrogate); asserts `bias_units is None`.
+    """
+    assert ens.bias_units is None, (
+        "deviation_planes needs an uncalibrated ensemble (train-time path)")
+    leak = float(spec.hrs_leak)
+    gp = ens.gp if ens.planes_per_chip() else ens.gp[None]
+    gn = ens.gn if ens.planes_per_chip() else ens.gn[None]
+    ep0 = gp + (1.0 - gp) * leak
+    en0 = gn + (1.0 - gn) * leak
+    return dataclasses.replace(ens, ep=ens.ep - ep0, en=ens.en - en0)
+
+
 # ------------------------------------------------------------- per-chip bias
 
 def _chip_current_stats(x_ext: jax.Array, ep, en, gp, gn, spec: MacroSpec

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import nonideal as ni
-from repro.core.crossbar import irc_linear_train, crossbar_forward
+from repro.core.crossbar import crossbar_forward
 from repro.core.macro import MacroSpec, DEFAULT_MACRO
 from repro.core.mapping import ternary_planes, binary_planes, fold_bn_to_bias_units
 from repro.core.ternary import (ternary_quantize, binary_quantize,
@@ -132,32 +132,41 @@ class IRCDetector:
         wq = wq.reshape(3, 3, cfg.group, cfg.group, n_groups)
         return wq
 
+    def _gconv_pre(self, blk: PyTree, x4: jax.Array, cin: int, cout: int
+                   ) -> Tuple[jax.Array, jax.Array]:
+        """Differentiable QAT pre-activation shared by the single-draw and
+        ensemble train paths: quantized grouped conv + (baseline) BN with
+        the sign-preserving |gamma| fold.  [N,H,W,cin] -> ([N,H,W,cout],
+        quantized kernel [3,3,g,g,ng]); the ensemble path folds its chips
+        axis into N before calling."""
+        cfg = self.cfg
+        n_groups = cout // cfg.group
+        wq = self._gconv_weights(blk, cin, cout)       # [3,3,g,g,ng]
+        xg = x4.reshape(x4.shape[:-1] + (n_groups, cfg.group))
+        outs = [jax.lax.conv_general_dilated(
+            xg[..., g, :], wq[..., g], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            for g in range(n_groups)]
+        pre = jnp.concatenate(outs, axis=-1)           # [N,H,W,cout]
+        if cfg.use_bn:
+            bn = blk["bn"]
+            mu = jnp.mean(pre, axis=(0, 1, 2))
+            var = jnp.var(pre, axis=(0, 1, 2))
+            # |gamma|: the in-memory BN fold (Fig. 13a) is only
+            # sign-preserving for positive gamma, so the baseline QAT
+            # constrains it (standard BNN-BN folding practice)
+            pre = (jnp.abs(bn["gamma"]) * (pre - mu)
+                   / jnp.sqrt(var + 1e-5) + bn["beta"])
+        return pre, wq
+
     def _gconv(self, blk: PyTree, x: jax.Array, cin: int, cout: int, *,
                mode: str, key: jax.Array, cfg_ni: ni.NonidealConfig,
                sa_extra: float = 0.0) -> jax.Array:
         """Binary group conv + (baseline) BN + binary activation."""
         cfg = self.cfg
-        n_groups = cout // cfg.group
         # inputs are {0,1} activations from the previous layer
         if mode == "train":
-            wq = self._gconv_weights(blk, cin, cout)   # [3,3,g,g,ng]
-            xg = x.reshape(x.shape[:-1] + (n_groups, cfg.group))
-            outs = []
-            for g in range(n_groups):
-                k = wq[..., g]                          # [3,3,g,g]
-                outs.append(jax.lax.conv_general_dilated(
-                    xg[..., g, :], k, (1, 1), "SAME",
-                    dimension_numbers=("NHWC", "HWIO", "NHWC")))
-            pre = jnp.concatenate(outs, axis=-1)        # [B,H,W,cout]
-            if cfg.use_bn:
-                bn = blk["bn"]
-                mu = jnp.mean(pre, axis=(0, 1, 2))
-                var = jnp.var(pre, axis=(0, 1, 2))
-                # |gamma|: the in-memory BN fold (Fig. 13a) is only
-                # sign-preserving for positive gamma, so the baseline QAT
-                # constrains it (standard BNN-BN folding practice)
-                pre = (jnp.abs(bn["gamma"]) * (pre - mu)
-                       / jnp.sqrt(var + 1e-5) + bn["beta"])
+            pre, wq = self._gconv_pre(blk, x, cin, cout)
             if cfg_ni.any():
                 # QAT noise surrogate at the pre-activation level.  The
                 # activated-LRS fraction comes from the quantized weights
@@ -249,7 +258,8 @@ class IRCDetector:
 
     def _gconv_ensemble(self, groups, x: jax.Array, cin: int, cout: int, *,
                         cfg_ni: ni.NonidealConfig,
-                        sa_extra: float = 0.0) -> jax.Array:
+                        sa_extra: float = 0.0,
+                        output: str = "binary") -> jax.Array:
         """Ensemble-mode group conv: one vmapped `ensemble_apply` per group
         services every chip of a `DetectorEnsemble` layer.
 
@@ -258,6 +268,10 @@ class IRCDetector:
         [chips,B,H,W,cin] (chip-diverged activations downstream).  Returns
         [chips,B,H,W,cout]; chip `c` is bit-identical to the single-chip
         structural path with the corresponding folded key.
+
+        `output` passes through to `ensemble_apply`: "binary" (eval-mode SA
+        decisions) or "diff" (raw analog difference — how the train-ensemble
+        path turns deviation planes into per-chip pre-activation errors).
         """
         from repro.mc.engine import ensemble_apply   # lazy: mc builds on models
         cfg = self.cfg
@@ -274,9 +288,53 @@ class IRCDetector:
                                  accumulation=cfg.accumulation,
                                  partial_rows=cfg.partial_rows,
                                  sa_extra_units=sa_extra,
+                                 output=output,
                                  per_chip_x=per_chip)
             outs.append(out.reshape(out.shape[0], B, H, W, cfg.group))
         return jnp.concatenate(outs, axis=-1)
+
+    def _gconv_train_ensemble(self, blk: PyTree, groups, x: jax.Array,
+                              cin: int, cout: int, *, key: jax.Array,
+                              cfg_ni: ni.NonidealConfig) -> jax.Array:
+        """Ensemble-aware QAT group conv (paper Sec. V at population scale).
+
+        The differentiable `mode="train"` pre-activation — chips axis folded
+        into the batch so ONE conv serves every chip — plus, per chip of the
+        pre-sampled deviation population (`repro.mc.build_train_ensemble`):
+
+          * the chip's FROZEN linear device-variation error, computed by the
+            shared ensemble machinery on (effective - nominal) conductance
+            deltas (`output="diff"`, no stochastic terms) and added under
+            stop_gradient exactly like the legacy noise surrogate;
+          * a fresh per-read SA-offset draw (std 0.5*g(p_pair)) keyed
+            `fold_in(block_key, chip_id)` so a chip's slice is invariant to
+            the ensemble it is evaluated in.
+
+        x is [B,H,W,cin] (chip-shared) or [chips,B,H,W,cin] downstream;
+        returns [chips,B,H,W,cout] binary activations.
+        """
+        cfg = self.cfg
+        n_chips = groups[0].n_chips
+        xf = x.reshape((-1,) + x.shape[-3:])           # fold chips into batch
+        pre, wq = self._gconv_pre(blk, xf, cin, cout)
+        pre = pre.reshape(x.shape[:-1] + (cout,))
+        if cfg_ni.device_variation:
+            dev = self._gconv_ensemble(groups, x, cin, cout,
+                                       cfg_ni=ni.NonidealConfig.none(),
+                                       output="diff")
+            pre = pre + jax.lax.stop_gradient(dev)     # adds the chips axis
+        if pre.ndim == 4:                              # no variation term:
+            pre = jnp.broadcast_to(pre[None], (n_chips,) + pre.shape)
+        if cfg_ni.sa_variation:
+            lrs_frac = jnp.mean(jnp.abs(jax.lax.stop_gradient(wq)))
+            p_pair = jnp.sum(jax.lax.stop_gradient(x), axis=-1,
+                             keepdims=True) * lrs_frac * 9.0 / cin * cfg.group
+            std = 0.5 * ni.sa_required_diff(p_pair, self.spec)
+            eps = jax.vmap(lambda c: jax.random.normal(
+                jax.random.fold_in(key, c), pre.shape[1:]))(
+                groups[0].chip_ids)
+            pre = pre + std * eps
+        return binary_activation(pre)
 
     # ------------------------------------------------------------ BN calib
     def calibrate_bn(self, params: PyTree, images: jax.Array,
@@ -342,7 +400,12 @@ class IRCDetector:
         sim (chip identity = `key`); mode="ensemble": every chip of a
         pre-sampled `repro.mc.DetectorEnsemble` at once — returns
         [chips,B,gh,gw,A*(5+C)], chip `c` bit-identical to mode="eval" with
-        key `fold_in(base_key, c)`.
+        key `fold_in(base_key, c)`; mode="train_ensemble": differentiable
+        ensemble-aware QAT — `ensemble` carries DEVIATION planes
+        (`repro.mc.build_train_ensemble`) and the returned
+        [chips,B,gh,gw,A*(5+C)] predictions see each chip's frozen variation
+        error plus fresh per-read SA noise (chips folded into the batch by
+        the loss).
         """
         cfg = self.cfg
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -350,7 +413,7 @@ class IRCDetector:
             images.astype(cfg.dtype), params["stem"], (2, 2), "SAME",
             dimension_numbers=("NHWC", "HWIO", "NHWC"))
         bn = params["stem_bn"]
-        if mode == "train":
+        if mode in ("train", "train_ensemble"):
             mu = jnp.mean(x, axis=(0, 1, 2))
             var = jnp.var(x, axis=(0, 1, 2))
         else:
@@ -373,6 +436,11 @@ class IRCDetector:
                     x = self._gconv_ensemble(
                         ensemble.layers[f"s{s}b{b}"], x, cin, ch,
                         cfg_ni=cfg_ni, sa_extra=sa_extra)
+                elif mode == "train_ensemble":
+                    x = self._gconv_train_ensemble(
+                        params[f"s{s}b{b}"], ensemble.layers[f"s{s}b{b}"],
+                        x, cin, ch, key=jax.random.fold_in(key, s * 10 + b),
+                        cfg_ni=cfg_ni)
                 else:
                     x = self._gconv(params[f"s{s}b{b}"], x, cin, ch,
                                     mode=mode,

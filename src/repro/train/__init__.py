@@ -1,2 +1,3 @@
 from repro.train.steps import (TrainState, make_train_step, make_eval_step,
-                               make_decode_step, abstract_train_state)
+                               make_decode_step, abstract_train_state,
+                               make_det_qat_step, ensemble_key_for_step)

@@ -3,39 +3,49 @@
 One jitted AdamW step over the synthetic detection batches — enough training
 for population-mAP sweeps to be ordering-meaningful on smoke geometries.
 The paper-scale driver (`examples/train_detector.py`) keeps its own richer
-loop (LR schedule, noise-aware QAT, logging); this helper exists so the
+loop (LR schedule, noise-aware QAT, logging) on the SAME step builder
+(`repro.train.steps.make_det_qat_step`); this helper exists so the
 CLI/benchmark call sites don't each carry a drifting copy of the same step.
+
+`train_chips` turns on ensemble-aware QAT: every step trains against a small
+chip population (deviation planes keyed by the established `fold_in` stream,
+resampled every `resample_every` steps) instead of one i.i.d. noise draw.
+`train_chips=1` (default) is the legacy single-draw step, bit-for-bit.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.optim import AdamWConfig, adamw_init, adamw_update
-from repro.train.det_loss import yolo_loss
+from repro.optim import AdamWConfig, adamw_init
+from repro.train.steps import ensemble_key_for_step, make_det_qat_step
 
 
 def quick_qat(det, data, steps: int, batch: int, *, lr: float = 3e-3,
-              weight_decay: float = 1e-3, seed: int = 0, data_seed: int = 1):
-    """Train `det` for `steps` AdamW steps on `data` and return params."""
+              weight_decay: float = 1e-3, seed: int = 0, data_seed: int = 1,
+              key: Optional[jax.Array] = None, train_chips: int = 1,
+              resample_every: int = 1, cfg_ni=None):
+    """Train `det` for `steps` AdamW steps on `data` and return params.
+
+    `key` (defaults to `PRNGKey(data_seed)`, the historical stream) is the
+    single root of the run: per-step surrogate-noise keys are
+    `fold_in(key, s)` and — for `train_chips >= 2` — chip populations are
+    keyed `ensemble_key_for_step(key, s, resample_every)`, so CLI/benchmark
+    callers reproduce a run from one root key.
+    """
     params = det.init(jax.random.PRNGKey(seed))
     opt = adamw_init(params)
-    ocfg = AdamWConfig(weight_decay=weight_decay)
+    step = jax.jit(make_det_qat_step(
+        det, train_chips=train_chips, cfg_ni=cfg_ni,
+        opt_cfg=AdamWConfig(weight_decay=weight_decay)))
 
-    @jax.jit
-    def step(params, opt, images, targets, k):
-        def loss_fn(p):
-            pred = det.apply(p, images, mode="train", key=k)
-            return yolo_loss(pred, targets, det.cfg.n_anchors,
-                             det.cfg.n_classes)
-        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
-        params, opt, _ = adamw_update(grads, opt, params, jnp.float32(lr),
-                                      ocfg)
-        return params, opt, loss
-
+    root = jax.random.PRNGKey(data_seed) if key is None else key
+    lr32 = jnp.float32(lr)
     for s in range(steps):
         b = data.batch_for_step(s, batch)
-        params, opt, _ = step(params, opt, b.images, b.targets,
-                              jax.random.fold_in(
-                                  jax.random.PRNGKey(data_seed), s))
+        params, opt, _ = step(params, opt, b.images, b.targets, lr32,
+                              jax.random.fold_in(root, s),
+                              ensemble_key_for_step(root, s, resample_every))
     return params

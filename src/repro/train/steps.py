@@ -10,7 +10,6 @@ from `repro.sharding.rules`.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -117,6 +116,80 @@ def make_train_step(lm: LM, *, opt_cfg: AdamWConfig = AdamWConfig(),
         return new_state, metrics
 
     return train_step
+
+
+# ------------------------------------------------------------- detector QAT
+
+# Salt separating the chip-population key stream from the per-step noise
+# stream (`fold_in(root, step)`), so one root key reproduces a whole QAT run.
+ENSEMBLE_KEY_STREAM = 0x0E25
+
+
+def ensemble_key_for_step(key: jax.Array, step: int,
+                          resample_every: int = 1) -> jax.Array:
+    """Chip-population key for QAT step `step`.
+
+    Advances every `resample_every` steps: within a window the population's
+    variation masks are FROZEN (the same dies are seen while their planes are
+    rebuilt from the current quantized weights each step), and the dies are
+    resampled exactly on schedule.
+    """
+    assert resample_every >= 1, resample_every
+    return jax.random.fold_in(jax.random.fold_in(key, ENSEMBLE_KEY_STREAM),
+                              step // resample_every)
+
+
+def make_det_qat_step(det, *, train_chips: int = 1,
+                      cfg_ni=None,
+                      opt_cfg: AdamWConfig = AdamWConfig(weight_decay=1e-3)
+                      ) -> Callable:
+    """Build the detector QAT step shared by `quick_qat`, the MC CLI and the
+    paper-scale driver:
+
+        (params, opt, images, targets, lr, key, ens_key)
+            -> (params, opt, loss)
+
+    `train_chips=1` (default) is EXACTLY the legacy single-draw step — loss
+    through `mode="train"` with one surrogate-noise draw keyed `key`;
+    `ens_key` is ignored.  Bit-identity with the historical `quick_qat` step
+    is a guarantee (tests pin it).
+
+    `train_chips>=2` is ensemble-aware QAT (paper Sec. V at population
+    scale): the step draws a `train_chips` deviation population keyed
+    `ens_key` (`repro.mc.build_train_ensemble` — planes from the CURRENT
+    quantized weights, chip identity frozen between `ens_key` changes), runs
+    `mode="train_ensemble"`, and averages the loss over chip realizations by
+    folding the chips axis into the batch.
+    """
+    from repro.core import nonideal as ni
+    from repro.train.det_loss import yolo_loss
+    if train_chips < 1:
+        raise ValueError(f"train_chips must be >= 1, got {train_chips}")
+    cfg_ni = ni.NonidealConfig.none() if cfg_ni is None else cfg_ni
+
+    def qat_step(params, opt, images, targets, lr, key, ens_key):
+        def loss_fn(p):
+            if train_chips == 1:
+                pred = det.apply(p, images, mode="train", key=key,
+                                 cfg_ni=cfg_ni)
+                return yolo_loss(pred, targets, det.cfg.n_anchors,
+                                 det.cfg.n_classes)
+            from repro.mc.detector_mc import build_train_ensemble
+            ens = build_train_ensemble(ens_key, det, p, train_chips,
+                                       cfg=cfg_ni)
+            pred = det.apply(p, images, mode="train_ensemble", key=key,
+                             cfg_ni=cfg_ni, ensemble=ens)
+            pred = pred.reshape((-1,) + pred.shape[2:])   # chips into batch
+            tiled = jax.tree.map(
+                lambda t: jnp.tile(t, (train_chips,) + (1,) * (t.ndim - 1)),
+                targets)
+            return yolo_loss(pred, tiled, det.cfg.n_anchors,
+                             det.cfg.n_classes)
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt, _ = adamw_update(grads, opt, params, lr, opt_cfg)
+        return params, opt, loss
+
+    return qat_step
 
 
 def make_eval_step(lm: LM) -> Callable:

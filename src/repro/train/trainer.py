@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional
 
 import jax

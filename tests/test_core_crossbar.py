@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (DEFAULT_MACRO, MacroSpec, NonidealConfig,
+from repro.core import (MacroSpec, NonidealConfig,
                         ternary_quantize, binary_quantize, binary_activation,
                         ternary_fractions, ternary_planes, binary_planes,
                         extend_inputs, fold_bn_to_bias_units,

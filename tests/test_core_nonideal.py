@@ -4,8 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (MacroSpec, DEFAULT_MACRO, NonidealConfig, wl_point,
-                        nonlinearity_ratio, apply_nonlinearity,
+from repro.core import (DEFAULT_MACRO, NonidealConfig, wl_point,
+                        nonlinearity_ratio,
                         ir_drop_factors, apply_ir_drop, sample_variation_mask,
                         sa_required_diff, sensing_failure, resolve_sa)
 

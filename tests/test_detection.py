@@ -8,8 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs.registry import get_config
-from repro.data.detection import (SyntheticDetectionData, yolo_targets,
-                                  render_batch, ANCHORS)
+from repro.data.detection import SyntheticDetectionData, ANCHORS
 from repro.models import LM
 from repro.models.lm_config import IRCMode
 from repro.train.det_loss import yolo_loss, evaluate_map, _iou, _nms

@@ -1,0 +1,178 @@
+"""Ensemble-aware QAT (train/steps.py + mode="train_ensemble"): the
+train_chips=1 bit-identity guarantee, the resample_every cadence, the
+deviation-plane semantics, and chip-slice invariance to ensemble size."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import yolo_irc
+from repro.core import (NonidealConfig, ternary_quantize, ternary_planes,
+                        DEFAULT_MACRO)
+from repro.data.detection import SyntheticDetectionData
+from repro.models import IRCDetector
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.mc import (sample_ensemble, deviation_planes, ensemble_apply,
+                      build_train_ensemble)
+from repro.train.det_loss import yolo_loss
+from repro.train.det_qat import quick_qat
+from repro.train.steps import ensemble_key_for_step, make_det_qat_step
+
+
+def _setup(scheme="ternary"):
+    cfg = yolo_irc.smoke(scheme)
+    det = IRCDetector(cfg)
+    data = SyntheticDetectionData(img_hw=cfg.img_hw, stride=cfg.strides,
+                                  n_classes=cfg.n_classes,
+                                  n_anchors=cfg.n_anchors)
+    return det, data
+
+
+def _tree_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+class TestTrainChips1BitIdentity:
+    def test_step_bit_identical_to_seed_quick_qat(self):
+        """The refactored quick_qat (shared step builder, hoisted root key)
+        with train_chips=1 must retrace the SEED implementation bit-for-bit:
+        same init, same fold_in(PRNGKey(data_seed), s) noise stream, same
+        AdamW update."""
+        det, data = _setup("ternary")
+        steps, batch, lr, wd = 3, 2, 3e-3, 1e-3
+
+        # the seed repo's quick_qat, inlined verbatim
+        params = det.init(jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        ocfg = AdamWConfig(weight_decay=wd)
+
+        @jax.jit
+        def step(params, opt, images, targets, k):
+            def loss_fn(p):
+                pred = det.apply(p, images, mode="train", key=k)
+                return yolo_loss(pred, targets, det.cfg.n_anchors,
+                                 det.cfg.n_classes)
+            (loss, _), grads = jax.value_and_grad(loss_fn,
+                                                  has_aux=True)(params)
+            params, opt, _ = adamw_update(grads, opt, params,
+                                          jnp.float32(lr), ocfg)
+            return params, opt, loss
+
+        for s in range(steps):
+            b = data.batch_for_step(s, batch)
+            params, opt, _ = step(params, opt, b.images, b.targets,
+                                  jax.random.fold_in(jax.random.PRNGKey(1),
+                                                     s))
+
+        new = quick_qat(det, data, steps, batch, lr=lr, weight_decay=wd)
+        assert _tree_equal(params, new)
+
+    def test_key_argument_reproduces_data_seed_stream(self):
+        """Threading key=PRNGKey(data_seed) must reproduce the default
+        stream exactly (the hoisted-root-key satellite fix)."""
+        det, data = _setup("ternary")
+        a = quick_qat(det, data, 2, 2)                               # data_seed=1
+        b = quick_qat(det, data, 2, 2, key=jax.random.PRNGKey(1))
+        assert _tree_equal(a, b)
+
+
+class TestDeviationPlanes:
+    def test_deviation_diff_matches_manual_delta(self):
+        """ensemble_apply on deviation planes (cfg=none, output='diff') is
+        exactly x_ext @ (ep - ep0) - x_ext @ (en - en0) per chip."""
+        w = ternary_quantize(jax.random.normal(jax.random.PRNGKey(0),
+                                               (90, 12)))
+        mapped = ternary_planes(w, bias_rows=8)
+        ens = sample_ensemble(jax.random.PRNGKey(1), mapped, 3,
+                              cfg=NonidealConfig.all())
+        dev = deviation_planes(ens)
+        x = (jax.random.uniform(jax.random.PRNGKey(2), (5, 90))
+             > 0.5).astype(jnp.float32)
+        out = ensemble_apply(dev, x, cfg=NonidealConfig.none(),
+                             output="diff")
+        leak = DEFAULT_MACRO.hrs_leak
+        ep0 = ens.gp + (1 - ens.gp) * leak
+        en0 = ens.gn + (1 - ens.gn) * leak
+        x_ext = jnp.concatenate([jnp.ones((5, 8)), x], axis=-1)
+        want = jnp.stack([x_ext @ (ens.ep[c] - ep0) - x_ext @ (ens.en[c] - en0)
+                          for c in range(3)])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_deviation_zero_without_device_variation(self):
+        det, _ = _setup("ternary")
+        params = det.init(jax.random.PRNGKey(0))
+        ens = build_train_ensemble(jax.random.PRNGKey(1), det, params, 2,
+                                   cfg=NonidealConfig(sa_variation=True))
+        worst = max(float(jnp.max(jnp.abs(g.ep))) + float(jnp.max(jnp.abs(g.en)))
+                    for groups in ens.layers.values() for g in groups)
+        assert worst == 0.0
+
+
+class TestTrainEnsembleMode:
+    def test_chip_slice_invariant_to_ensemble_size(self):
+        """Chip c's train_ensemble output depends only on its chip identity
+        (fold_in stream position + per-chip SA key), not on which ensemble
+        evaluates it — same invariance the eval-time MC engine pins."""
+        det, data = _setup("ternary")
+        params = det.init(jax.random.PRNGKey(0))
+        b = data.batch_for_step(0, 2)
+        ni_all = NonidealConfig.all()
+        k_ens, k_step = jax.random.PRNGKey(3), jax.random.PRNGKey(9)
+        e3 = build_train_ensemble(k_ens, det, params, 3, cfg=ni_all)
+        e1 = build_train_ensemble(k_ens, det, params, 1, cfg=ni_all)
+        p3 = det.apply(params, b.images, mode="train_ensemble", key=k_step,
+                       cfg_ni=ni_all, ensemble=e3)
+        p1 = det.apply(params, b.images, mode="train_ensemble", key=k_step,
+                       cfg_ni=ni_all, ensemble=e1)
+        assert p3.shape[0] == 3 and p1.shape[0] == 1
+        np.testing.assert_array_equal(np.asarray(p3[0]), np.asarray(p1[0]))
+        assert not np.array_equal(np.asarray(p3[0]), np.asarray(p3[1]))
+
+    def test_ensemble_step_trains_both_designs(self):
+        """One jitted ensemble step updates params with finite values for
+        the proposed AND the baseline design (BN path included)."""
+        for scheme in ("ternary", "binary"):
+            det, data = _setup(scheme)
+            params = det.init(jax.random.PRNGKey(0))
+            opt = adamw_init(params)
+            step = jax.jit(make_det_qat_step(det, train_chips=2,
+                                             cfg_ni=NonidealConfig.all()))
+            b = data.batch_for_step(0, 2)
+            root = jax.random.PRNGKey(1)
+            new_params, _, loss = step(params, opt, b.images, b.targets,
+                                       jnp.float32(3e-3),
+                                       jax.random.fold_in(root, 0),
+                                       ensemble_key_for_step(root, 0))
+            assert np.isfinite(float(loss)), scheme
+            assert not _tree_equal(params, new_params), scheme
+            assert all(bool(jnp.all(jnp.isfinite(v)))
+                       for v in jax.tree.leaves(new_params)), scheme
+
+
+class TestResampleCadence:
+    def test_key_schedule_windows(self):
+        root = jax.random.PRNGKey(7)
+        keys = [np.asarray(ensemble_key_for_step(root, s, 3))
+                for s in range(7)]
+        for s in (1, 2, 4, 5):   # same window -> same population key
+            ref = keys[(s // 3) * 3]
+            np.testing.assert_array_equal(keys[s], ref)
+        assert not np.array_equal(keys[2], keys[3])   # boundary resamples
+        assert not np.array_equal(keys[5], keys[6])
+
+    def test_planes_change_exactly_on_schedule(self):
+        """With resample_every=2 the sampled population is identical within
+        a window and differs across the boundary."""
+        det, _ = _setup("ternary")
+        params = det.init(jax.random.PRNGKey(0))
+        root = jax.random.PRNGKey(5)
+        ens = [build_train_ensemble(ensemble_key_for_step(root, s, 2),
+                                    det, params, 2, cfg=NonidealConfig.all())
+               for s in range(3)]
+
+        def planes(e):
+            return np.concatenate([np.asarray(g.ep).ravel()
+                                   for gs in e.layers.values() for g in gs])
+        np.testing.assert_array_equal(planes(ens[0]), planes(ens[1]))
+        assert not np.array_equal(planes(ens[1]), planes(ens[2]))

@@ -1,8 +1,6 @@
 """Pallas kernel validation: shape/dtype/effect sweeps against the pure-jnp
 oracles (interpret mode on CPU), block-shape sweeps, hypothesis properties,
 and bit-exact consistency with the core structural simulation."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -25,7 +23,7 @@ except ImportError:             # hypothesis optional: property tests skip,
 
     st = _NoStrategies()
 
-from repro.core import (DEFAULT_MACRO, MacroSpec, NonidealConfig,
+from repro.core import (DEFAULT_MACRO, NonidealConfig,
                         ternary_quantize, ternary_planes, crossbar_forward)
 from repro.kernels import (IrcEpilogueParams, irc_mvm, irc_mvm_ref,
                            ternary_matmul, ternary_matmul_ref,

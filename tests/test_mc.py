@@ -1,8 +1,6 @@
 """Chip-ensemble Monte Carlo engine (repro.mc): determinism, streaming
 statistics, and numerical consistency of the chip-batched paths with the
 single-chip structural simulation / kernel."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

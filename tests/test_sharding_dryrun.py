@@ -9,7 +9,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.sharding.rules import spec_for_axes, cache_axes_tree
 from repro.launch.dryrun import collective_bytes, _shape_bytes

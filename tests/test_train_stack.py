@@ -1,9 +1,5 @@
 """Training stack tests: optimizer, schedules, data determinism, trainer
 loop with checkpoint/restart (fault tolerance), serving engine."""
-import shutil
-import tempfile
-from pathlib import Path
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,7 +12,7 @@ from repro.models import LM
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          warmup_step_decay, global_norm)
 from repro.serve import ServeEngine
-from repro.train import TrainState, make_train_step
+from repro.train import make_train_step
 from repro.train.steps import init_train_state
 from repro.train.trainer import Trainer, TrainerConfig
 from repro.ckpt import CheckpointManager, save_pytree, restore_pytree, latest_step
