@@ -12,9 +12,16 @@ regressions that matter here do: lost jit caching, an accidental python
 loop over chips, per-step retracing of the ensemble step.  The flip side of
 ratio gating: a PR that speeds up only the DENOMINATOR leg >2.5x (e.g. a
 much faster python-loop `crossbar_forward` or single-chip step) shrinks the
-ratio just like a regression would — such a PR should re-run
-`benchmarks.run --only mc_` and commit the refreshed `BENCH_mc.json`
-baselines alongside the optimization.
+ratio just like a regression would — such a PR should re-run the three
+`benchmarks.mc_bench` benches (e.g. via this script) and commit the
+refreshed `BENCH_mc.json` baselines alongside the optimization.
+
+Since the obs layer landed, `engine_chips_per_sec` (and hence the gated
+speedups) is STEADY-STATE throughput — the first-chunk jit compile is split
+out into `engine_compile_s` and reported here informationally, not gated
+(compile time is machine- and cache-sensitive).  The baseline's "host"
+section (hostname, jax/jaxlib versions, backend) is printed next to the
+fresh run's so a drift report is interpretable across machines.
 
   PYTHONPATH=src python -m benchmarks.check_drift
 """
@@ -24,6 +31,18 @@ import json
 import sys
 
 DRIFT_FACTOR = 2.5
+
+
+def _host_line(record: dict) -> str:
+    h = record.get("host", {})
+    return (f"{h.get('host', '?')} jax={h.get('jax', '?')} "
+            f"jaxlib={h.get('jaxlib', '?')} backend={h.get('backend', '?')}")
+
+
+def _compile_line(record: dict) -> str:
+    det = record.get("detector", {})
+    return (f"layer={record.get('engine_compile_s', float('nan')):.2f}s "
+            f"detector={det.get('engine_compile_s', float('nan')):.2f}s")
 
 
 def _metrics(record: dict) -> dict:
@@ -51,7 +70,8 @@ def main() -> None:
     if not mc_bench.BENCH_JSON.exists():
         print("# no committed BENCH_mc.json baseline; nothing to gate")
         return
-    baseline = _metrics(json.loads(mc_bench.BENCH_JSON.read_text()))
+    baseline_rec = json.loads(mc_bench.BENCH_JSON.read_text())
+    baseline = _metrics(baseline_rec)
 
     # fresh run (rewrites BENCH_mc.json in the workspace — baseline captured
     # above; CI never commits the rewrite)
@@ -59,7 +79,15 @@ def main() -> None:
                   mc_bench.qat_step_bench):
         for name, us, derived in bench():
             print(f"{name},{us:.1f},{derived}", flush=True)
-    fresh = _metrics(json.loads(mc_bench.BENCH_JSON.read_text()))
+    mc_bench.finalize_obs(mode="check_drift")
+    fresh_rec = json.loads(mc_bench.BENCH_JSON.read_text())
+    fresh = _metrics(fresh_rec)
+
+    print(f"# host baseline: {_host_line(baseline_rec)}")
+    print(f"# host fresh:    {_host_line(fresh_rec)}")
+    print(f"# engine compile (info, not gated): "
+          f"baseline {_compile_line(baseline_rec)} | "
+          f"fresh {_compile_line(fresh_rec)}")
 
     failures = []
     for name in sorted(baseline.keys() & fresh.keys()):

@@ -31,6 +31,7 @@ def main() -> None:
             failures += 1
             print(f"{fn.__name__},ERROR,{type(e).__name__}:{e}",
                   file=sys.stderr, flush=True)
+    mc_bench.finalize_obs(failures=failures)
     print(f"# total {time.time()-t0:.1f}s, {failures} failures",
           file=sys.stderr)
     if failures:

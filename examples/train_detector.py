@@ -6,23 +6,29 @@ for BOTH designs:
   proposed : ternary 20/60/20, no BN, single-shot, extra bias
   baseline : binary + shared reference, in-memory BN, partial sums
 
+The ablation runs as chip-population Monte Carlo (`run_ablation_detector`):
+each column reports POPULATION mean±std mAP@0.5 over `--mc-chips` sampled
+dies, and the per-chip metric vectors, the QAT step timing (compile vs
+steady-state), and the per-chunk convergence stream land in an
+`experiments/<run_id>/` run directory (manifest.json + metrics.jsonl +
+per-chip .npy; `--run-dir ''` disables, `--trace` adds a profiler trace).
+
 Defaults are CPU-sized (32x32 images, ~200 steps, a few minutes); pass
 --full for the paper's 1024x576 geometry (cluster-scale).
 
   PYTHONPATH=src python examples/train_detector.py --steps 200
 """
 import argparse
-import time
 
 import jax
-import numpy as np
 
 from repro.configs import yolo_irc
 from repro.core import NonidealConfig
 from repro.data.detection import SyntheticDetectionData
+from repro.mc import McConfig, run_ablation_detector
 from repro.models import IRCDetector
+from repro.obs import NULL_RUNLOG, PhaseTimer, maybe_runlog, timed_step
 from repro.optim import AdamWConfig, adamw_init, warmup_step_decay
-from repro.train.det_loss import evaluate_map
 from repro.train.steps import ensemble_key_for_step, make_det_qat_step
 
 ABLATION = [
@@ -36,23 +42,26 @@ ABLATION = [
 
 
 def train(det, data, steps, batch, lr, seed=0, noise_cfg=NonidealConfig.none(),
-          train_chips=1, resample_every=1, key=None):
+          train_chips=1, resample_every=1, key=None, obs=NULL_RUNLOG,
+          design=""):
     """QAT on the shared step builder (`repro.train.steps.make_det_qat_step`).
 
     `train_chips=1` is the legacy single-draw surrogate; >=2 trains against a
     chip population (ensemble-aware QAT, paper Sec. V at population scale).
     `key` roots BOTH the per-step noise stream and the chip-population
     stream, so a run is reproducible from one key (defaults to the
-    historical PRNGKey(1)).
+    historical PRNGKey(1)).  Steps are phase-timed: the first call's
+    compile latency is split from the steady-state steps/sec, both logged
+    through `obs`.
     """
     params = det.init(jax.random.PRNGKey(seed))
     opt = adamw_init(params)
-    step_fn = jax.jit(make_det_qat_step(
+    timer = PhaseTimer("qat_step", unit="steps")
+    step_fn = timed_step(jax.jit(make_det_qat_step(
         det, train_chips=train_chips, cfg_ni=noise_cfg,
-        opt_cfg=AdamWConfig(weight_decay=1e-3)))   # paper: AdamW, wd=1e-3
+        opt_cfg=AdamWConfig(weight_decay=1e-3))), timer)  # paper: AdamW 1e-3
     root = jax.random.PRNGKey(1) if key is None else key
 
-    t0 = time.time()
     for s in range(steps):
         b = data.batch_for_step(s, batch)
         lr_s = warmup_step_decay(s, base_lr=lr, warmup_steps=max(steps // 10, 1),
@@ -64,26 +73,13 @@ def train(det, data, steps, batch, lr, seed=0, noise_cfg=NonidealConfig.none(),
                                                           resample_every))
         if s % max(steps // 10, 1) == 0:
             print(f"  step {s:4d}  loss {float(loss):8.4f} "
-                  f"({time.time()-t0:5.1f}s)", flush=True)
+                  f"({timer.total_s:5.1f}s)", flush=True)
+            obs.log_event("train_step", design=design, step=s,
+                          loss=float(loss), step_time_s=timer.last_s)
+    timer.log_to(obs, design=design, train_chips=train_chips)
+    print(f"  qat: compile {timer.compile_s:.1f}s, "
+          f"{timer.rate():.2f} steps/s steady", flush=True)
     return params
-
-
-def eval_map(det, params, data, n_batches, batch, cfg_ni, seeds, mode="eval"):
-    """mAP over `seeds` nonideal-sample draws (paper: 10 seeds)."""
-    maps = []
-    for seed in range(seeds):
-        preds, gt_b, gt_c = [], [], []
-        for i in range(n_batches):
-            b = data.batch_for_step(1000 + i, batch)
-            pred = det.apply(params, b.images, mode=mode,
-                             key=jax.random.PRNGKey(7000 + seed),
-                             cfg_ni=cfg_ni)
-            preds.extend(np.asarray(pred))
-            gt_b.extend(b.boxes)
-            gt_c.extend(b.classes)
-        maps.append(evaluate_map(np.asarray(preds), gt_b, gt_c,
-                                 det.cfg.n_anchors, det.cfg.n_classes) * 100)
-    return float(np.mean(maps)), float(np.std(maps))
 
 
 def main():
@@ -92,7 +88,13 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--eval-batches", type=int, default=4)
-    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--mc-chips", type=int, default=8,
+                    help="chip-population size per ablation column")
+    ap.add_argument("--mc-chunk", type=int, default=0,
+                    help="MC chunk size (0 = whole population per chunk)")
+    ap.add_argument("--stderr-target", type=float, default=None,
+                    help="stop each MC column once the mAP standard error "
+                         "reaches this target")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale 1024x576 geometry")
     ap.add_argument("--designs", default="proposed,baseline")
@@ -104,11 +106,27 @@ def main():
                          "(implies --qat-noise; 1 = legacy single draw)")
     ap.add_argument("--resample-every", type=int, default=1,
                     help="QAT steps between chip-population resamples")
+    ap.add_argument("--run-dir", default="experiments",
+                    help="root for the experiments/<run_id>/ run directory "
+                         "('' disables)")
+    ap.add_argument("--run-id", default="")
+    ap.add_argument("--trace", action="store_true",
+                    help="capture a jax.profiler trace into the run dir")
     args = ap.parse_args()
+
+    obs = maybe_runlog(bool(args.run_dir), "train-detector",
+                       args=vars(args), root=args.run_dir,
+                       run_id=args.run_id or None)
+    if obs.path is not None:
+        print(f"# run dir: {obs.path}")
+    if args.trace:
+        obs.start_trace()
 
     noise_cfg = (NonidealConfig.all()
                  if (args.qat_noise or args.train_chips > 1)
                  else NonidealConfig.none())
+    mc = McConfig(n_chips=args.mc_chips,
+                  chunk_size=args.mc_chunk or args.mc_chips)
     results = {}
     for design in args.designs.split(","):
         cfg = (yolo_irc.proposed() if design == "proposed"
@@ -123,33 +141,46 @@ def main():
               f"train_chips={args.train_chips}) ===")
         params = train(det, data, args.steps, args.batch, args.lr,
                        noise_cfg=noise_cfg, train_chips=args.train_chips,
-                       resample_every=args.resample_every)
+                       resample_every=args.resample_every, obs=obs,
+                       design=design)
         # deployment step (both designs): populate the digital stem's running
         # stats — eval mode normalizes with them — and, for the baseline, the
         # block BN stats the in-memory BN fold maps into bias cells
         calib = data.batch_for_step(999, args.batch * 4)
         params = det.calibrate_bn(params, calib.images)
 
-        print(f"=== {design}: structural-sim ablation "
-              f"({args.seeds} nonideal seeds) ===")
+        print(f"=== {design}: population MC ablation "
+              f"({args.mc_chips} chips) ===")
+        ev = data.batch_for_step(1000, args.batch * args.eval_batches)
+        sweeps = run_ablation_detector(
+            jax.random.PRNGKey(7000), det, params, ev.images, ev.boxes,
+            ev.classes, ablations=ABLATION, mc=mc, obs=obs,
+            stderr_target=args.stderr_target)
         results[design] = {}
-        for name, cfg_ni in ABLATION:
-            m, s = eval_map(det, params, data, args.eval_batches, args.batch,
-                            cfg_ni, seeds=1 if name == "ideal" else args.seeds)
-            results[design][name] = (m, s)
-            print(f"  {name:10s} mAP {m:5.1f} ± {s:4.1f}")
+        for name, res in sweeps.items():
+            m = res.metrics["map50"]
+            results[design][name] = (m["mean"] * 100, m["std"] * 100)
+            obs.save_array(f"per_chip_map50_{design}_{name}",
+                           res.per_chip["map50"])
+            print(f"  {name:10s} mAP {m['mean'] * 100:5.1f} "
+                  f"± {m['std'] * 100:4.1f}  "
+                  f"({res.n_chips} chips, {res.chips_per_sec:.2f} chips/s "
+                  f"steady, compile {res.compile_s:.1f}s)")
 
-    print("\n=== Table II (synthetic-data analog) ===")
+    print("\n=== Table II (synthetic-data analog, population mean) ===")
     header = "design     " + "".join(f"{n:>12s}" for n, _ in ABLATION)
     print(header)
     for design, r in results.items():
         row = f"{design:10s}" + "".join(f"{r[n][0]:12.1f}" for n, _ in ABLATION)
         print(row)
+    summary = {}
     if {"proposed", "baseline"} <= results.keys():
         drop_p = results["proposed"]["ideal"][0] - results["proposed"]["all"][0]
         drop_b = results["baseline"]["ideal"][0] - results["baseline"]["all"][0]
+        summary = {"drop_proposed": drop_p, "drop_baseline": drop_b}
         print(f"\nmAP drop under all effects: proposed {drop_p:.1f}, "
               f"baseline {drop_b:.1f} (paper: 3.85 vs catastrophic)")
+    obs.finalize(status="ok", **summary)
 
 
 if __name__ == "__main__":

@@ -13,6 +13,14 @@ Two network levels:
   mAP is only meaningful with training; drops and spreads are reported the
   same way either way.
 
+Every run gets an `experiments/<run_id>/` directory (root set by
+`--run-dir`; empty string disables) holding `manifest.json` (args, git SHA,
+jax versions, host, backend), the `metrics.jsonl` event stream (per-chunk
+per-chip values + convergence stderr), per-chip metric vectors as `.npy`,
+the machine-readable `results.csv` (or wherever `--out` points), and — with
+`--trace` — a `jax.profiler` trace.  stdout carries the human-readable
+summary only.
+
   # 64-chip ensemble, all nonideal effects, proposed design
   PYTHONPATH=src python -m repro.launch.mc --chips 64
 
@@ -20,13 +28,17 @@ Two network levels:
   PYTHONPATH=src python -m repro.launch.mc --chips 128 --scheme binary \
       --bias-rows 0 --ablation table2 --backend kernel
 
-  # per-die bias calibration + JSON report
+  # per-die bias calibration + JSON report + machine CSV
   PYTHONPATH=src python -m repro.launch.mc --chips 64 --calibrate \
-      --json experiments/mc_proposed.json
+      --json experiments/mc_proposed.json --out mc_proposed.csv
 
-  # whole-detector population mAP, smoke geometry, 16 chips
+  # adaptive population size: stop when the mean is known to ±0.002
+  PYTHONPATH=src python -m repro.launch.mc --chips 1024 \
+      --stderr-target 0.002
+
+  # whole-detector population mAP, smoke geometry, 16 chips, with trace
   PYTHONPATH=src python -m repro.launch.mc --network detector --chips 16 \
-      --det-steps 100 --ablation table2
+      --det-steps 100 --ablation table2 --trace
 
   # ensemble-aware QAT: single-draw vs 4-chip-population training, scored
   # side by side with whole-network population mAP
@@ -76,7 +88,35 @@ def _ablation_columns(args, table):
     return columns
 
 
-def _write_report(args, report) -> None:
+def _make_runlog(args):
+    """RunLog under `<run-dir>/<run_id>/` (NullRunLog when --run-dir '')."""
+    from repro.obs import maybe_runlog
+    obs = maybe_runlog(bool(args.run_dir), f"mc-{args.network}",
+                       args=vars(args), root=args.run_dir,
+                       run_id=args.run_id or None)
+    if obs.path is not None:
+        print(f"# run dir: {obs.path}")
+    if args.trace:
+        obs.start_trace()
+    return obs
+
+
+def _write_csv(args, obs, lines) -> None:
+    """Machine-readable CSV through the obs writer: `--out PATH` wins, else
+    `<run_dir>/results.csv`; stdout stays human-readable either way."""
+    text = "\n".join(lines) + "\n"
+    if args.out:
+        out = Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(text)
+    else:
+        out = obs.write_text("results.csv", text)
+    if out is not None:
+        print(f"# wrote {out}")
+
+
+def _write_report(args, obs, report) -> None:
+    obs.write_text("report.json", json.dumps(report, indent=1))
     if not args.json:
         return
     out = Path(args.json)
@@ -122,13 +162,20 @@ def run_detector(args) -> None:
     from repro.data.detection import SyntheticDetectionData
     from repro.models import IRCDetector
     from repro.mc import McConfig, run_mc_detector, TABLE2_ABLATION
+    from repro.obs import PhaseTimer
 
+    obs = _make_runlog(args)
     cfg = yolo_irc.smoke(args.det_scheme)
     det = IRCDetector(cfg)
     data = SyntheticDetectionData(img_hw=cfg.img_hw, stride=cfg.strides,
                                   n_classes=cfg.n_classes,
                                   n_anchors=cfg.n_anchors)
-    checkpoints = _train_checkpoints(args, det, data)
+    qat_timer = PhaseTimer("qat", unit="checkpoints")
+    with qat_timer.lap() as lap:
+        checkpoints = _train_checkpoints(args, det, data)
+        lap.items = len(checkpoints)
+    qat_timer.log_to(obs, det_steps=args.det_steps,
+                     train_chips=args.train_chips)
     # deployment calibration: stem running stats (+ baseline block BN)
     calib = data.batch_for_step(999, args.det_batch * 4)
     ev = data.batch_for_step(1000, args.det_batch)
@@ -140,30 +187,109 @@ def run_detector(args) -> None:
     print(f"# detector {args.det_scheme} {cfg.img_hw[0]}x{cfg.img_hw[1]} "
           f"batch={args.det_batch} chips={args.chips} "
           f"qat_steps={args.det_steps} train_chips={args.train_chips}")
-    print("checkpoint,config,map50_mean,map50_std,drop_vs_ideal,"
-          "q05,q50,q95,chips_per_s")
-    report = {"args": vars(args), "results": {}}
+    print(f"{'checkpoint':10s} {'config':14s} {'map50 mean±std':>16s} "
+          f"{'drop':>7s} {'q05':>7s} {'q50':>7s} {'q95':>7s} "
+          f"{'chips':>5s} {'chips/s':>8s} {'compile_s':>9s}")
+    csv_lines = ["checkpoint,config,map50_mean,map50_std,drop_vs_ideal,"
+                 "q05,q50,q95,chips,chips_per_s,compile_s"]
+    report = {"args": vars(args), "run_id": obs.manifest.get("run_id"),
+              "results": {}}
     for ck, params in checkpoints.items():
         params = det.calibrate_bn(params, calib.images)
         results = {}
         for name, cfg_ni in columns:
+            obs.log_event("ablation_column", checkpoint=ck, column=name)
             results[name] = run_mc_detector(
                 key, det, params, ev.images, ev.boxes, ev.classes,
-                mc=dataclasses.replace(mc, cfg=cfg_ni))
+                mc=dataclasses.replace(mc, cfg=cfg_ni), obs=obs,
+                stderr_target=args.stderr_target)
         ideal_mean = results["ideal"].metrics["map50"]["mean"]
         report["results"][ck] = {}
         for name, res in results.items():
             m = res.metrics["map50"]
-            print(f"{ck},{name},{m['mean']:.4f},{m['std']:.4f},"
-                  f"{ideal_mean - m['mean']:.4f},"
-                  f"{m.get('q05', float('nan')):.4f},"
-                  f"{m.get('q50', float('nan')):.4f},"
-                  f"{m.get('q95', float('nan')):.4f},{res.chips_per_sec:.2f}")
+            drop = ideal_mean - m["mean"]
+            print(f"{ck:10s} {name:14s} "
+                  f"{m['mean']:8.4f}±{m['std']:6.4f} {drop:7.4f} "
+                  f"{m.get('q05', float('nan')):7.4f} "
+                  f"{m.get('q50', float('nan')):7.4f} "
+                  f"{m.get('q95', float('nan')):7.4f} "
+                  f"{res.n_chips:5d} {res.chips_per_sec:8.2f} "
+                  f"{res.compile_s:9.2f}")
+            csv_lines.append(
+                f"{ck},{name},{m['mean']:.6f},{m['std']:.6f},{drop:.6f},"
+                f"{m.get('q05', float('nan')):.6f},"
+                f"{m.get('q50', float('nan')):.6f},"
+                f"{m.get('q95', float('nan')):.6f},{res.n_chips},"
+                f"{res.chips_per_sec:.2f},{res.compile_s:.4f}")
+            obs.save_array(f"per_chip_map50_{ck}_{name}",
+                           res.per_chip["map50"])
             report["results"][ck][name] = {
                 "metrics": res.metrics, "wall_s": res.wall_s,
+                "compile_s": res.compile_s,
                 "chips_per_sec": res.chips_per_sec,
                 "per_chip_map50": res.per_chip["map50"].tolist()}
-    _write_report(args, report)
+    _write_csv(args, obs, csv_lines)
+    _write_report(args, obs, report)
+    obs.finalize(status="ok", network="detector")
+
+
+def run_layer(args) -> None:
+    import jax
+    from repro.mc import McConfig, run_mc, TABLE2_ABLATION
+
+    obs = _make_runlog(args)
+    mapped, x, ref_bits = build_layer(args)
+    mc = McConfig(n_chips=args.chips, chunk_size=args.chunk,
+                  accumulation=args.accumulation, backend=args.backend,
+                  calibrate=args.calibrate)
+    key = jax.random.PRNGKey(args.seed)
+
+    results = {}
+    for name, cfg in _ablation_columns(args, TABLE2_ABLATION):
+        obs.log_event("ablation_column", column=name)
+        results[name] = run_mc(key, mapped, x, ref_bits=ref_bits,
+                               mc=dataclasses.replace(mc, cfg=cfg), obs=obs,
+                               stderr_target=args.stderr_target)
+
+    ideal_mean = results["ideal"].metrics["bit_agreement"]["mean"]
+    print(f"# {args.scheme} {args.fan_in}x{args.n_out} batch={args.batch} "
+          f"chips={args.chips} backend={args.backend}"
+          + (" calibrated" if args.calibrate else ""))
+    print(f"{'config':14s} {'agree mean±std':>16s} {'drop':>7s} "
+          f"{'q05':>7s} {'q50':>7s} {'q95':>7s} {'chips':>5s} "
+          f"{'chips/s':>8s} {'compile_s':>9s}")
+    csv_lines = ["config,agree_mean,agree_std,drop_vs_ideal,q05,q50,q95,"
+                 "chips,chips_per_s,compile_s"]
+    report = {"args": vars(args), "run_id": obs.manifest.get("run_id"),
+              "results": {}}
+    for name, res in results.items():
+        m = res.metrics["bit_agreement"]
+        drop = ideal_mean - m["mean"]
+        print(f"{name:14s} {m['mean']:8.4f}±{m['std']:6.4f} {drop:7.4f} "
+              f"{m.get('q05', float('nan')):7.4f} "
+              f"{m.get('q50', float('nan')):7.4f} "
+              f"{m.get('q95', float('nan')):7.4f} "
+              f"{res.n_chips:5d} {res.chips_per_sec:8.2f} "
+              f"{res.compile_s:9.2f}")
+        csv_lines.append(
+            f"{name},{m['mean']:.6f},{m['std']:.6f},{drop:.6f},"
+            f"{m.get('q05', float('nan')):.6f},"
+            f"{m.get('q50', float('nan')):.6f},"
+            f"{m.get('q95', float('nan')):.6f},{res.n_chips},"
+            f"{res.chips_per_sec:.2f},{res.compile_s:.4f}")
+        for metric in ("bit_agreement", "ones_fraction"):
+            obs.save_array(f"per_chip_{metric}_{name}", res.per_chip[metric])
+        report["results"][name] = {
+            "metrics": res.metrics, "wall_s": res.wall_s,
+            "compile_s": res.compile_s,
+            "chips_per_sec": res.chips_per_sec,
+            "per_chip_bit_agreement":
+                res.per_chip["bit_agreement"].tolist(),
+            "bias_units": (res.bias_units.tolist()
+                           if res.bias_units is not None else None)}
+    _write_csv(args, obs, csv_lines)
+    _write_report(args, obs, report)
+    obs.finalize(status="ok", network="layer")
 
 
 def main() -> None:
@@ -207,6 +333,20 @@ def main() -> None:
                     help="per-die extra-bias calibration before evaluation")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default="", help="write the report here")
+    ap.add_argument("--run-dir", default="experiments",
+                    help="root for the experiments/<run_id>/ run directory "
+                         "(manifest + metrics.jsonl + per-chip .npy; "
+                         "'' disables)")
+    ap.add_argument("--run-id", default="",
+                    help="explicit run id (default: timestamped)")
+    ap.add_argument("--out", default="",
+                    help="machine-readable CSV path "
+                         "(default <run_dir>/results.csv)")
+    ap.add_argument("--stderr-target", type=float, default=None,
+                    help="stop each sweep once the standard error of the "
+                         "mean reaches this target (adaptive chip count)")
+    ap.add_argument("--trace", action="store_true",
+                    help="capture a jax.profiler trace into the run dir")
     args = ap.parse_args()
 
     if args.network == "detector":
@@ -230,41 +370,7 @@ def main() -> None:
     if misused:
         raise SystemExit(f"--network layer does not take {', '.join(misused)} "
                          f"(detector QAT flags)")
-
-    import jax
-    from repro.mc import McConfig, run_mc, TABLE2_ABLATION
-
-    mapped, x, ref_bits = build_layer(args)
-    mc = McConfig(n_chips=args.chips, chunk_size=args.chunk,
-                  accumulation=args.accumulation, backend=args.backend,
-                  calibrate=args.calibrate)
-    key = jax.random.PRNGKey(args.seed)
-
-    results = {name: run_mc(key, mapped, x, ref_bits=ref_bits,
-                            mc=dataclasses.replace(mc, cfg=cfg))
-               for name, cfg in _ablation_columns(args, TABLE2_ABLATION)}
-
-    ideal_mean = results["ideal"].metrics["bit_agreement"]["mean"]
-    print(f"# {args.scheme} {args.fan_in}x{args.n_out} batch={args.batch} "
-          f"chips={args.chips} backend={args.backend}"
-          + (" calibrated" if args.calibrate else ""))
-    print("config,agree_mean,agree_std,drop_vs_ideal,q05,q50,q95,chips_per_s")
-    report = {"args": vars(args), "results": {}}
-    for name, res in results.items():
-        m = res.metrics["bit_agreement"]
-        drop = ideal_mean - m["mean"]
-        print(f"{name},{m['mean']:.4f},{m['std']:.4f},{drop:.4f},"
-              f"{m.get('q05', float('nan')):.4f},"
-              f"{m.get('q50', float('nan')):.4f},"
-              f"{m.get('q95', float('nan')):.4f},{res.chips_per_sec:.2f}")
-        report["results"][name] = {
-            "metrics": res.metrics, "wall_s": res.wall_s,
-            "chips_per_sec": res.chips_per_sec,
-            "per_chip_bit_agreement":
-                res.per_chip["bit_agreement"].tolist(),
-            "bias_units": (res.bias_units.tolist()
-                           if res.bias_units is not None else None)}
-    _write_report(args, report)
+    run_layer(args)
 
 
 if __name__ == "__main__":

@@ -29,7 +29,22 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--run-dir", default="",
+                    help="experiments/<run_id>/ run directory root "
+                         "(per-wave telemetry; '' disables)")
+    ap.add_argument("--run-id", default="")
+    ap.add_argument("--trace", action="store_true",
+                    help="capture a jax.profiler trace into the run dir")
     args = ap.parse_args()
+
+    from repro.obs import maybe_runlog
+    obs = maybe_runlog(bool(args.run_dir), f"serve-{args.arch}",
+                       args=vars(args), root=args.run_dir,
+                       run_id=args.run_id or None)
+    if obs.path is not None:
+        print(f"# run dir: {obs.path}")
+    if args.trace:
+        obs.start_trace()
 
     cfg = get_config(args.arch, args.variant)
     lm = LM(cfg)
@@ -48,7 +63,7 @@ def main():
 
     engine = ServeEngine(lm, params, batch_slots=args.slots,
                          max_len=args.max_len,
-                         temperature=args.temperature)
+                         temperature=args.temperature, obs=obs)
     rng = jax.random.PRNGKey(1)
     prompts = []
     for i in range(args.requests):
@@ -62,8 +77,14 @@ def main():
     new = sum(len(r.tokens) for r in results)
     for i, r in enumerate(results[:4]):
         print(f"req {i}: {len(r.prompt)} prompt toks -> {r.tokens[:8]}...")
+    decode = engine.stats()["decode"]
     print(f"{len(results)} requests, {new} new tokens, {dt:.1f}s "
-          f"({new/dt:.1f} tok/s)")
+          f"({new/dt:.1f} tok/s overall; "
+          f"{decode['tokens_per_sec']:.1f} tok/s steady decode, "
+          f"compile {decode['compile_s']:.1f}s)")
+    engine.log_stats()
+    obs.finalize(status="ok", requests=len(results), new_tokens=new,
+                 decode_tokens_per_sec=decode["tokens_per_sec"])
 
 
 if __name__ == "__main__":

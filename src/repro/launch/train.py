@@ -56,7 +56,22 @@ def main():
                     help="ternary-QAT every projection (the paper's mode)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--weight-decay", type=float, default=1e-3)
+    ap.add_argument("--run-dir", default="",
+                    help="experiments/<run_id>/ run directory root "
+                         "(manifest + metrics.jsonl; '' disables)")
+    ap.add_argument("--run-id", default="")
+    ap.add_argument("--trace", action="store_true",
+                    help="capture a jax.profiler trace into the run dir")
     args = ap.parse_args()
+
+    from repro.obs import maybe_runlog
+    obs = maybe_runlog(bool(args.run_dir), f"train-{args.arch}",
+                       args=vars(args), root=args.run_dir,
+                       run_id=args.run_id or None)
+    if obs.path is not None:
+        print(f"# run dir: {obs.path}")
+    if args.trace:
+        obs.start_trace()
 
     cfg = get_config(args.arch, args.variant)
     if args.irc:
@@ -87,11 +102,17 @@ def main():
                       ckpt_every=max(args.steps // 4, 1),
                       ckpt_dir=args.ckpt_dir,
                       log_every=max(args.steps // 20, 1)),
-        step_fn, lambda s: data.batch_for_step(s), state)
+        step_fn, lambda s: data.batch_for_step(s), state, obs=obs)
     hist = trainer.run()
     print(f"final loss {hist[-1]['loss']:.4f} over {len(hist)} steps "
           f"(resumed at {hist[0]['step']}); "
-          f"stragglers: {len(trainer.straggler_steps)}")
+          f"stragglers: {len(trainer.straggler_steps)}; "
+          f"compile {trainer.step_timer.compile_s:.1f}s, "
+          f"{trainer.step_timer.rate():.2f} steps/s steady")
+    obs.finalize(status="ok", final_loss=hist[-1]["loss"],
+                 steps=len(hist),
+                 steps_per_sec=trainer.step_timer.rate(),
+                 compile_s=trainer.step_timer.compile_s)
 
 
 if __name__ == "__main__":

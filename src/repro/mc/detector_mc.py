@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -40,6 +39,7 @@ from repro.core.macro import MacroSpec
 from repro.mc.engine import McConfig, McResult, TABLE2_ABLATION
 from repro.mc.ensemble import ChipEnsemble, sample_ensemble_with_keys
 from repro.mc.stats import StreamingMoments
+from repro.obs import ConvergenceMonitor, PhaseTimer, RunLog, as_runlog
 
 
 @jax.tree_util.register_dataclass
@@ -146,7 +146,9 @@ def run_mc_detector(key: jax.Array, det, params, images: jax.Array,
                     gt_boxes: List[np.ndarray],
                     gt_classes: List[np.ndarray], *,
                     mc: McConfig = McConfig(),
-                    sa_extra: float = 0.0) -> McResult:
+                    sa_extra: float = 0.0,
+                    obs: Optional[RunLog] = None,
+                    stderr_target: Optional[float] = None) -> McResult:
     """Stream a chip population of the WHOLE detector over an eval batch.
 
     Per chunk: build the chunk's `DetectorEnsemble`, run ONE jitted
@@ -157,30 +159,56 @@ def run_mc_detector(key: jax.Array, det, params, images: jax.Array,
 
     `params` should carry calibrated stem-BN running stats
     (`det.calibrate_bn`) — eval-mode normalization uses them.
+
+    `obs` streams per-chunk events (raw per-chip mAPs + running stderr) into
+    a run directory; `stderr_target` stops at the first chunk boundary where
+    the mAP standard error reaches the target — identical moments to the
+    same-length prefix of the full run (same engine semantics as `run_mc`).
     """
     from repro.train.det_loss import evaluate_map_per_chip
 
+    obs = as_runlog(obs)
     moments = {"map50": StreamingMoments(mc.quantiles)}
+    monitor = ConvergenceMonitor(moments, stderr_target=stderr_target,
+                                 runlog=obs, phase="mc_detector")
+    timer = PhaseTimer("mc_detector_chunks", unit="chips")
+    obs.log_event("mc_start", phase="mc_detector", n_chips=mc.n_chips,
+                  chunk_size=mc.chunk_size, stderr_target=stderr_target)
 
-    t0 = time.perf_counter()
-    for lo in range(0, mc.n_chips, mc.chunk_size):
+    n_done = 0
+    for chunk_i, lo in enumerate(range(0, mc.n_chips, mc.chunk_size)):
         ids = jnp.arange(lo, min(lo + mc.chunk_size, mc.n_chips),
                          dtype=jnp.uint32)
-        ens = build_detector_ensemble(key, det, params, chip_ids=ids,
-                                      cfg=mc.cfg)
-        preds = np.asarray(jax.block_until_ready(_ensemble_forward(
-            params, images, ens, det_cfg=det.cfg, spec=det.spec,
-            cfg_ni=mc.cfg, sa_extra=sa_extra)))
-        moments["map50"].update(jnp.asarray(evaluate_map_per_chip(
-            preds, gt_boxes, gt_classes, det.cfg.n_anchors,
-            det.cfg.n_classes)))
-    wall = time.perf_counter() - t0
+        with timer.lap(items=int(ids.shape[0])):
+            ens = build_detector_ensemble(key, det, params, chip_ids=ids,
+                                          cfg=mc.cfg)
+            preds = np.asarray(jax.block_until_ready(_ensemble_forward(
+                params, images, ens, det_cfg=det.cfg, spec=det.spec,
+                cfg_ni=mc.cfg, sa_extra=sa_extra)))
+            vals = jnp.asarray(evaluate_map_per_chip(
+                preds, gt_boxes, gt_classes, det.cfg.n_anchors,
+                det.cfg.n_classes))
+        n_done += int(ids.shape[0])
+        moments["map50"].update(vals)
+        obs.log_event("chunk", phase="mc_detector", chunk=chunk_i,
+                      chip_lo=lo, chips=n_done, wall_s=timer.last_s,
+                      values={"map50": np.asarray(jnp.ravel(vals))})
+        if monitor.after_chunk(chunk_i, n_done):
+            obs.log_event("early_stop", chips=n_done, requested=mc.n_chips,
+                          stderr_target=stderr_target)
+            break
 
-    return McResult(
-        n_chips=mc.n_chips,
+    res = McResult(
+        n_chips=n_done,
         metrics={name: m.summary() for name, m in moments.items()},
         per_chip={name: m.per_chip for name, m in moments.items()},
-        wall_s=wall, chips_per_sec=mc.n_chips / max(wall, 1e-9))
+        wall_s=timer.total_s, chips_per_sec=timer.rate(),
+        compile_s=timer.compile_s)
+    obs.log_event("mc_result", phase="mc_detector", chips=n_done,
+                  requested=mc.n_chips, wall_s=res.wall_s,
+                  compile_s=res.compile_s, chips_per_sec=res.chips_per_sec,
+                  metrics=res.metrics)
+    return res
 
 
 def run_ablation_detector(key: jax.Array, det, params, images: jax.Array,
@@ -188,13 +216,19 @@ def run_ablation_detector(key: jax.Array, det, params, images: jax.Array,
                           gt_classes: List[np.ndarray], *,
                           ablations: Sequence[Tuple[str, ni.NonidealConfig]]
                           = TABLE2_ABLATION,
-                          mc: McConfig = McConfig()) -> Dict[str, McResult]:
+                          mc: McConfig = McConfig(),
+                          obs: Optional[RunLog] = None,
+                          stderr_target: Optional[float] = None
+                          ) -> Dict[str, McResult]:
     """Table II for the detector: one population mAP sweep per effect
     column, same chip key stream across columns (each effect set resamples
     the same dies' variation)."""
+    obs = as_runlog(obs)
     results = {}
     for name, cfg in ablations:
+        obs.log_event("ablation_column", phase="mc_detector", column=name)
         results[name] = run_mc_detector(
             key, det, params, images, gt_boxes, gt_classes,
-            mc=dataclasses.replace(mc, cfg=cfg))
+            mc=dataclasses.replace(mc, cfg=cfg), obs=obs,
+            stderr_target=stderr_target)
     return results

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -29,6 +28,7 @@ from repro.core.crossbar import crossbar_apply, _block_reduce, _accumulate
 from repro.mc.ensemble import ChipEnsemble, sample_ensemble, \
     calibrate_ensemble_bias, shard_ensemble
 from repro.mc.stats import StreamingMoments, DEFAULT_QUANTILES
+from repro.obs import ConvergenceMonitor, PhaseTimer, RunLog, as_runlog
 
 
 # ------------------------------------------------------------------ forward
@@ -202,12 +202,22 @@ class McConfig:
 
 @dataclasses.dataclass
 class McResult:
-    """Ensemble statistics for one sweep."""
+    """Ensemble statistics for one sweep.
+
+    `wall_s` is the whole sweep including the first chunk's trace/compile;
+    `compile_s` is that first-chunk wall alone, and `chips_per_sec` is the
+    STEADY-STATE rate over the remaining chunks (total-based when the sweep
+    ran a single chunk) — at small `n_chips` the old conflated rate was
+    dominated by compilation and meaningless as a throughput number.
+    With `stderr_target` early stop, `n_chips` is the count actually
+    evaluated (a prefix of the requested population).
+    """
     n_chips: int
     metrics: Dict[str, Dict[str, float]]      # name -> {mean,std,qXX,...}
     per_chip: Dict[str, np.ndarray]           # name -> [n_chips]
     wall_s: float
     chips_per_sec: float
+    compile_s: float = 0.0
     bias_units: Optional[np.ndarray] = None   # per-chip calibrated bias
 
     def summary_line(self, metric: str = "bit_agreement") -> str:
@@ -216,7 +226,8 @@ class McResult:
                       if k.startswith("q"))
         return (f"{metric}={m['mean']:.4f}±{m['std']:.4f} "
                 f"({qs}) over {self.n_chips} chips "
-                f"[{self.chips_per_sec:.1f} chips/s]")
+                f"[{self.chips_per_sec:.1f} chips/s steady, "
+                f"compile {self.compile_s:.2f}s]")
 
 
 HostMetricFn = Callable[[np.ndarray], np.ndarray]   # [chips,B,N] -> [chips]
@@ -227,7 +238,10 @@ def run_mc(key: jax.Array, mapped, x_bits: jax.Array, *,
            mc: McConfig = McConfig(), spec: MacroSpec = DEFAULT_MACRO,
            metric_fns: Optional[Dict[str, MetricFn]] = None,
            host_metric_fns: Optional[Dict[str, HostMetricFn]] = None,
-           x_calib_bits: Optional[jax.Array] = None, mesh=None) -> McResult:
+           x_calib_bits: Optional[jax.Array] = None, mesh=None,
+           obs: Optional[RunLog] = None,
+           stderr_target: Optional[float] = None,
+           stderr_metric: Optional[str] = None) -> McResult:
     """Stream an ensemble of `mc.n_chips` sampled chips over `x_bits`.
 
     Chips are sampled chunk-by-chunk (never materializing more than
@@ -240,7 +254,17 @@ def run_mc(key: jax.Array, mapped, x_bits: jax.Array, *,
     programs); host values fold into the same Welford/quantile accumulators.
     With `mesh`, each chunk's chips axis shards over the data-parallel axes
     (the "chips" rule) — the workload is embarrassingly parallel per chip.
+
+    Observability: pass `obs` (a `repro.obs.RunLog`) to stream per-chunk
+    events — raw per-chip metric values (replayable to the reported mean±std
+    bit-for-bit) and running count/mean/stderr — into the run directory.
+    `stderr_target` stops the sweep at the first chunk boundary where the
+    standard error of the mean of every tracked metric (or just
+    `stderr_metric`) is at or under the target; because chip `c` is keyed by
+    `fold_in(key, c)` regardless of chunking, the early-stopped moments are
+    bit-identical to the same-length prefix of the full run.
     """
+    obs = as_runlog(obs)
     fns: Dict[str, MetricFn] = {}
     if ref_bits is not None:
         fns["bit_agreement"] = bit_agreement_metric(ref_bits)
@@ -261,50 +285,76 @@ def run_mc(key: jax.Array, mapped, x_bits: jax.Array, *,
     use_fused = (not mc.calibrate and mesh is None and mc.backend == "jnp"
                  and not metric_fns and not host_fns)
 
-    t0 = time.perf_counter()
-    for lo in range(0, mc.n_chips, mc.chunk_size):
+    monitor = ConvergenceMonitor(moments, stderr_target=stderr_target,
+                                 stderr_metric=stderr_metric, runlog=obs)
+    timer = PhaseTimer("mc_chunks", unit="chips")
+    obs.log_event("mc_start", n_chips=mc.n_chips, chunk_size=mc.chunk_size,
+                  backend=mc.backend, calibrate=mc.calibrate,
+                  fused=use_fused, stderr_target=stderr_target)
+
+    n_done = 0
+    for chunk_i, lo in enumerate(range(0, mc.n_chips, mc.chunk_size)):
         ids = jnp.arange(lo, min(lo + mc.chunk_size, mc.n_chips),
                          dtype=jnp.uint32)
-        if use_fused:
-            vals = jax.block_until_ready(_fused_chunk_metrics(
-                key, ids, x_bits, mapped.g_pos, mapped.g_neg, ref_bits,
-                scheme=mapped.scheme, fan_in=mapped.fan_in, cfg=mc.cfg,
-                spec=spec, accumulation=mc.accumulation,
-                partial_rows=mc.partial_rows,
-                sa_extra_units=mc.sa_extra_units))
-            for name, v in vals.items():
-                moments[name].update(v)
-            continue
-        ens = sample_ensemble(key, mapped, chip_ids=ids, cfg=mc.cfg, spec=spec)
-        if mc.calibrate:
-            ens = calibrate_ensemble_bias(
-                ens, x_bits if x_calib_bits is None else x_calib_bits, spec)
-            bias_chunks.append(np.asarray(ens.bias_units))
-        if mesh is not None:
-            ens = shard_ensemble(ens, mesh)
-        if mc.backend == "kernel":
-            out = ensemble_apply_kernel(ens, x_bits, cfg=mc.cfg, spec=spec,
-                                        sa_extra_units=mc.sa_extra_units)
-        else:
-            out = ensemble_apply(ens, x_bits, cfg=mc.cfg, spec=spec,
-                                 accumulation=mc.accumulation,
-                                 partial_rows=mc.partial_rows,
-                                 sa_extra_units=mc.sa_extra_units)
-        out = jax.block_until_ready(out)
-        for name, fn in fns.items():
-            moments[name].update(fn(out))
-        if host_fns:
-            out_np = np.asarray(out)
-            for name, fn in host_fns.items():
-                moments[name].update(jnp.asarray(fn(out_np)))
-    wall = time.perf_counter() - t0
+        with timer.lap(items=int(ids.shape[0])):
+            if use_fused:
+                chunk_vals = dict(jax.block_until_ready(_fused_chunk_metrics(
+                    key, ids, x_bits, mapped.g_pos, mapped.g_neg, ref_bits,
+                    scheme=mapped.scheme, fan_in=mapped.fan_in, cfg=mc.cfg,
+                    spec=spec, accumulation=mc.accumulation,
+                    partial_rows=mc.partial_rows,
+                    sa_extra_units=mc.sa_extra_units)))
+            else:
+                ens = sample_ensemble(key, mapped, chip_ids=ids, cfg=mc.cfg,
+                                      spec=spec)
+                if mc.calibrate:
+                    ens = calibrate_ensemble_bias(
+                        ens, x_bits if x_calib_bits is None else x_calib_bits,
+                        spec)
+                    bias_chunks.append(np.asarray(ens.bias_units))
+                if mesh is not None:
+                    ens = shard_ensemble(ens, mesh)
+                if mc.backend == "kernel":
+                    out = ensemble_apply_kernel(
+                        ens, x_bits, cfg=mc.cfg, spec=spec,
+                        sa_extra_units=mc.sa_extra_units)
+                else:
+                    out = ensemble_apply(ens, x_bits, cfg=mc.cfg, spec=spec,
+                                         accumulation=mc.accumulation,
+                                         partial_rows=mc.partial_rows,
+                                         sa_extra_units=mc.sa_extra_units)
+                out = jax.block_until_ready(out)
+                chunk_vals = {name: fn(out) for name, fn in fns.items()}
+                if host_fns:
+                    out_np = np.asarray(out)
+                    for name, fn in host_fns.items():
+                        chunk_vals[name] = jnp.asarray(fn(out_np))
+        n_done += int(ids.shape[0])
+        for name, v in chunk_vals.items():
+            moments[name].update(v)
+        # the raw per-chip values are the replay evidence: folding them back
+        # through StreamingMoments in file order reproduces the reported
+        # mean±std bit-for-bit (tests/test_obs.py)
+        obs.log_event("chunk", phase="mc", chunk=chunk_i, chip_lo=lo,
+                      chips=n_done, wall_s=timer.last_s,
+                      values={name: np.asarray(jnp.ravel(v))
+                              for name, v in chunk_vals.items()})
+        if monitor.after_chunk(chunk_i, n_done):
+            obs.log_event("early_stop", chips=n_done, requested=mc.n_chips,
+                          stderr_target=stderr_target)
+            break
 
-    return McResult(
-        n_chips=mc.n_chips,
+    res = McResult(
+        n_chips=n_done,
         metrics={name: m.summary() for name, m in moments.items()},
         per_chip={name: m.per_chip for name, m in moments.items()},
-        wall_s=wall, chips_per_sec=mc.n_chips / max(wall, 1e-9),
+        wall_s=timer.total_s, chips_per_sec=timer.rate(),
+        compile_s=timer.compile_s,
         bias_units=(np.concatenate(bias_chunks) if bias_chunks else None))
+    obs.log_event("mc_result", chips=n_done, requested=mc.n_chips,
+                  wall_s=res.wall_s, compile_s=res.compile_s,
+                  chips_per_sec=res.chips_per_sec, metrics=res.metrics)
+    return res
 
 
 # ------------------------------------------------------------------ ablation
@@ -326,13 +376,18 @@ def run_ablation(key: jax.Array, mapped, x_bits: jax.Array, *,
                  ablations: Sequence[Tuple[str, ni.NonidealConfig]]
                  = TABLE2_ABLATION,
                  mc: McConfig = McConfig(), spec: MacroSpec = DEFAULT_MACRO,
-                 host_metric_fns: Optional[Dict[str, HostMetricFn]] = None
+                 host_metric_fns: Optional[Dict[str, HostMetricFn]] = None,
+                 obs: Optional[RunLog] = None,
+                 stderr_target: Optional[float] = None
                  ) -> Dict[str, McResult]:
     """Per-effect ensemble sweep: one `run_mc` per Table-II column, same
     chip key stream (each effect set resamples the same dies' variation)."""
+    obs = as_runlog(obs)
     results = {}
     for name, cfg in ablations:
+        obs.log_event("ablation_column", phase="mc", column=name)
         results[name] = run_mc(key, mapped, x_bits, ref_bits=ref_bits,
                                mc=dataclasses.replace(mc, cfg=cfg), spec=spec,
-                               host_metric_fns=host_metric_fns)
+                               host_metric_fns=host_metric_fns, obs=obs,
+                               stderr_target=stderr_target)
     return results

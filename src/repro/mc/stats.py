@@ -11,6 +11,7 @@ tests/test_mc.py against a one-shot jnp computation at 1e-6.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, NamedTuple, Sequence
 
 import jax
@@ -83,6 +84,26 @@ class StreamingMoments:
     def per_chip(self) -> np.ndarray:
         return (np.concatenate(self._values) if self._values
                 else np.zeros((0,), np.float32))
+
+    @property
+    def count(self) -> float:
+        return float(self._state.count)
+
+    @property
+    def mean_value(self) -> float:
+        return float(self._state.mean)
+
+    def stderr(self) -> float:
+        """Standard error of the running mean: std/sqrt(count), using the
+        same population std (ddof=0) as `summary()`, so convergence targets
+        are stated in the units the report itself uses.  inf below 2 chips
+        (no spread evidence yet) — the convergence monitor's early stop can
+        therefore never fire on a single sample."""
+        n = self.count
+        if n < 2:
+            return float("inf")
+        fin = welford_finalize(self._state)
+        return float(fin["std"]) / math.sqrt(n)
 
     def summary(self) -> Dict[str, float]:
         fin = welford_finalize(self._state)

@@ -1,0 +1,27 @@
+"""repro.obs — run manifests, phase timing, and MC convergence telemetry.
+
+One lightweight layer used by every entry point (MC CLI, QAT drivers,
+benchmarks, serving), so the whole stack speaks one telemetry format:
+
+  RunLog / NullRunLog    `experiments/<run_id>/` writer: manifest.json
+                         (args, git SHA, jax versions, host, backend),
+                         append-only metrics.jsonl, per-chip .npy arrays,
+                         optional jax.profiler trace
+  PhaseTimer / timed_step  first-call compile time split from steady-state
+                         execute time; chips/sec, steps/sec, tokens/sec
+  ConvergenceMonitor     standard-error-of-the-mean per metric after each
+                         MC chunk + optional `stderr_target` early stop
+  collect_env / git_sha  provenance helpers (also stamped into
+                         BENCH_mc.json so drift baselines are interpretable)
+
+See README "Observability" for the run-directory layout and how to replay
+a metrics.jsonl stream.
+"""
+from repro.obs.runlog import (RunLog, NullRunLog, NULL_RUNLOG, as_runlog,
+                              collect_env, git_sha)
+from repro.obs.timers import PhaseTimer, timed_step, maybe_runlog
+from repro.obs.convergence import ConvergenceMonitor
+
+__all__ = ["RunLog", "NullRunLog", "NULL_RUNLOG", "as_runlog", "collect_env",
+           "git_sha", "PhaseTimer", "timed_step", "maybe_runlog",
+           "ConvergenceMonitor"]

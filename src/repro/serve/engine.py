@@ -10,13 +10,14 @@ executable — the form a TPU serving deployment actually runs; the dry-run's
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import LM
+from repro.obs import PhaseTimer, RunLog, as_runlog
 
 PyTree = Any
 
@@ -29,9 +30,15 @@ class GenerationResult:
 
 
 class ServeEngine:
+    """`obs` (a `repro.obs.RunLog`) streams per-wave telemetry — prefill
+    vs decode wall time, new tokens, tokens/sec — and the engine's phase
+    timers split the first wave's compile latency from steady-state decode
+    throughput (`stats()`)."""
+
     def __init__(self, lm: LM, params: PyTree, *, batch_slots: int = 4,
                  max_len: int = 128, eos_id: Optional[int] = None,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 obs: Optional[RunLog] = None):
         self.lm = lm
         self.params = params
         self.slots = batch_slots
@@ -40,6 +47,10 @@ class ServeEngine:
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(lm.decode_step)
+        self.obs = as_runlog(obs)
+        self.prefill_timer = PhaseTimer("serve_prefill", unit="tokens")
+        self.decode_timer = PhaseTimer("serve_decode", unit="tokens")
+        self._waves = 0
 
     def _sample(self, logits: jax.Array) -> np.ndarray:
         if self.temperature > 0:
@@ -62,26 +73,50 @@ class ServeEngine:
             for s, (_, p) in enumerate(wave):
                 toks[s, maxlen - len(p):] = p      # left-pad to align ends
             logits = None
-            for t in range(maxlen):               # teacher-forced prefill
-                logits, cache = self._decode(self.params,
-                                             jnp.asarray(toks[:, t:t + 1]),
-                                             cache)
+            prompt_toks = sum(len(p) for _, p in wave)
+            with self.prefill_timer.lap(items=prompt_toks):
+                for t in range(maxlen):           # teacher-forced prefill
+                    logits, cache = self._decode(
+                        self.params, jnp.asarray(toks[:, t:t + 1]), cache)
+                jax.block_until_ready(logits)
             out_tokens: List[List[int]] = [[] for _ in wave]
             finished = [False] * len(wave)
-            cur = self._sample(logits)
-            for _ in range(max_new_tokens):
-                for s in range(len(wave)):
-                    if not finished[s]:
-                        out_tokens[s].append(int(cur[s]))
-                        if self.eos_id is not None and cur[s] == self.eos_id:
-                            finished[s] = True
-                if all(finished):
-                    break
-                logits, cache = self._decode(self.params,
-                                             jnp.asarray(cur[:, None]), cache)
+            with self.decode_timer.lap() as lap:
                 cur = self._sample(logits)
+                for _ in range(max_new_tokens):
+                    for s in range(len(wave)):
+                        if not finished[s]:
+                            out_tokens[s].append(int(cur[s]))
+                            if (self.eos_id is not None
+                                    and cur[s] == self.eos_id):
+                                finished[s] = True
+                    if all(finished):
+                        break
+                    logits, cache = self._decode(
+                        self.params, jnp.asarray(cur[:, None]), cache)
+                    cur = self._sample(logits)
+                lap.items = sum(len(t) for t in out_tokens)
+            self._waves += 1
+            self.obs.log_event(
+                "serve_wave", wave=self._waves, requests=len(wave),
+                prompt_tokens=prompt_toks,
+                new_tokens=int(lap.items),
+                prefill_s=self.prefill_timer.last_s,
+                decode_s=self.decode_timer.last_s,
+                tokens_per_sec=lap.items / max(self.decode_timer.last_s,
+                                               1e-9))
             for s, (req, p) in enumerate(wave):
                 results[req] = GenerationResult(prompt=list(p),
                                                 tokens=out_tokens[s],
                                                 finished=finished[s])
         return [r for r in results if r is not None]
+
+    def stats(self) -> Dict[str, Dict[str, float]]:
+        """Phase summaries: first-wave compile latency split from
+        steady-state prefill/decode tokens/sec."""
+        return {"prefill": self.prefill_timer.summary(),
+                "decode": self.decode_timer.summary()}
+
+    def log_stats(self) -> None:
+        self.prefill_timer.log_to(self.obs, waves=self._waves)
+        self.decode_timer.log_to(self.obs, waves=self._waves)

@@ -11,13 +11,13 @@
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
 from repro.ckpt import CheckpointManager
+from repro.obs import PhaseTimer, RunLog, as_runlog
 from repro.train.steps import TrainState
 
 PyTree = Any
@@ -36,7 +36,7 @@ class TrainerConfig:
 class Trainer:
     def __init__(self, cfg: TrainerConfig, train_step: Callable,
                  batch_fn: Callable[[int], Dict],
-                 state: TrainState):
+                 state: TrainState, obs: Optional[RunLog] = None):
         self.cfg = cfg
         self.train_step = jax.jit(train_step, donate_argnums=(0,))
         self.batch_fn = batch_fn
@@ -45,6 +45,8 @@ class Trainer:
         self.straggler_steps: List[int] = []
         self.ckpt = (CheckpointManager(cfg.ckpt_dir, keep=cfg.keep_ckpts)
                      if cfg.ckpt_dir else None)
+        self.obs = as_runlog(obs)
+        self.step_timer = PhaseTimer("train_step", unit="steps")
 
     def maybe_resume(self) -> int:
         if self.ckpt is None:
@@ -61,10 +63,10 @@ class Trainer:
         step_times: List[float] = []
         for step in range(start, self.cfg.total_steps):
             batch = self.batch_fn(step)
-            t0 = time.time()
-            self.state, metrics = self.train_step(self.state, batch)
-            jax.block_until_ready(metrics["loss"])
-            dt = time.time() - t0
+            with self.step_timer.lap(items=1):
+                self.state, metrics = self.train_step(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+            dt = self.step_timer.last_s
             step_times.append(dt)
             if len(step_times) > 5:
                 med = float(np.median(step_times[-50:]))
@@ -77,8 +79,11 @@ class Trainer:
             if self.cfg.log_every and step % self.cfg.log_every == 0:
                 print(f"step {step:5d} loss {rec['loss']:.4f} "
                       f"({dt*1e3:.0f} ms)", flush=True)
+                self.obs.log_event("train_step", **rec)
             if self.ckpt and (step + 1) % self.cfg.ckpt_every == 0:
                 self.ckpt.save_async(self.state, step + 1)
+                self.obs.log_event("checkpoint", step=step + 1)
+        self.step_timer.log_to(self.obs, stragglers=len(self.straggler_steps))
         if self.ckpt:
             self.ckpt.wait()
             from repro.ckpt import latest_step

@@ -1,0 +1,101 @@
+"""Streaming statistics (repro.mc.stats): Welford merge algebra, exact
+quantiles, and the stderr that drives the MC convergence monitor."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.mc import (StreamingMoments, welford_add_batch, welford_finalize,
+                      welford_init, welford_merge)
+from repro.mc.stats import DEFAULT_QUANTILES
+
+
+def _state(xs):
+    return welford_add_batch(welford_init(), jnp.asarray(xs))
+
+
+class TestWelfordMerge:
+    def test_empty_state_is_identity_both_sides(self):
+        """merge(init, s) == s == merge(s, init) EXACTLY: with b.count == 0
+        the Chan update adds delta*0/safe_n == 0.0 to every field, so the
+        identity holds bitwise, not just to tolerance."""
+        s = _state(jax.random.normal(jax.random.PRNGKey(0), (37,)))
+        for merged in (welford_merge(welford_init(), s),
+                       welford_merge(s, welford_init())):
+            np.testing.assert_array_equal(np.asarray(merged.count),
+                                          np.asarray(s.count))
+            np.testing.assert_array_equal(np.asarray(merged.mean),
+                                          np.asarray(s.mean))
+            np.testing.assert_array_equal(np.asarray(merged.m2),
+                                          np.asarray(s.m2))
+
+    def test_merge_of_empties_is_empty(self):
+        m = welford_merge(welford_init(), welford_init())
+        assert float(m.count) == 0.0 and float(m.mean) == 0.0
+        assert float(m.m2) == 0.0
+
+    @pytest.mark.parametrize("sizes", [(5, 7, 11), (1, 1, 100), (64, 1, 3)])
+    def test_merge_associative(self, sizes):
+        """(a+b)+c == a+(b+c) up to float round-off — what licenses folding
+        chunk states in whatever order the engine produces them."""
+        keys = jax.random.split(jax.random.PRNGKey(1), 3)
+        a, b, c = (_state(3.0 * jax.random.normal(k, (n,)) + 0.5)
+                   for k, n in zip(keys, sizes))
+        left = welford_finalize(welford_merge(welford_merge(a, b), c))
+        right = welford_finalize(welford_merge(a, welford_merge(b, c)))
+        assert float(left["count"]) == float(right["count"])
+        np.testing.assert_allclose(float(left["mean"]),
+                                   float(right["mean"]), atol=1e-6)
+        np.testing.assert_allclose(float(left["std"]),
+                                   float(right["std"]), atol=1e-5)
+
+    def test_merge_matches_oneshot(self):
+        xs = jax.random.normal(jax.random.PRNGKey(2), (200,))
+        merged = welford_merge(_state(xs[:73]), _state(xs[73:]))
+        fin = welford_finalize(merged)
+        np.testing.assert_allclose(float(fin["mean"]), float(jnp.mean(xs)),
+                                   atol=1e-6)
+        np.testing.assert_allclose(float(fin["std"]), float(jnp.std(xs)),
+                                   atol=1e-6)
+
+
+class TestStreamingMoments:
+    def test_quantiles_exact_vs_numpy(self):
+        """The retained per-chip scalars make every default quantile EXACTLY
+        np.quantile of the full vector, independent of chunking."""
+        xs = np.asarray(jax.random.normal(jax.random.PRNGKey(7), (257,)),
+                        np.float32)
+        sm = StreamingMoments()
+        rng = np.random.RandomState(0)
+        lo = 0
+        while lo < xs.size:           # random ragged chunking
+            n = int(rng.randint(1, 40))
+            sm.update(jnp.asarray(xs[lo:lo + n]))
+            lo += n
+        s = sm.summary()
+        for q in DEFAULT_QUANTILES:
+            expect = float(np.quantile(xs.astype(np.float64), q))
+            np.testing.assert_allclose(s[f"q{int(round(q * 100)):02d}"],
+                                       expect, rtol=0, atol=1e-12)
+        np.testing.assert_array_equal(sm.per_chip, xs)
+
+    def test_stderr_is_population_std_over_sqrt_n(self):
+        xs = jax.random.normal(jax.random.PRNGKey(9), (50,))
+        sm = StreamingMoments()
+        sm.update(xs[:20])
+        sm.update(xs[20:])
+        expect = float(jnp.std(xs)) / math.sqrt(50)   # ddof=0, like summary()
+        np.testing.assert_allclose(sm.stderr(), expect, atol=1e-7)
+        assert sm.count == 50.0
+        np.testing.assert_allclose(sm.mean_value, float(jnp.mean(xs)),
+                                   atol=1e-6)
+
+    def test_stderr_inf_below_two_samples(self):
+        sm = StreamingMoments()
+        assert sm.stderr() == float("inf")            # empty
+        sm.update(jnp.asarray([0.25]))
+        assert sm.stderr() == float("inf")            # one sample: no spread
+        sm.update(jnp.asarray([0.75]))
+        assert math.isfinite(sm.stderr())
