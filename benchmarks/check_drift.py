@@ -23,6 +23,11 @@ out into `engine_compile_s` and reported here informationally, not gated
 section (hostname, jax/jaxlib versions, backend) is printed next to the
 fresh run's so a drift report is interpretable across machines.
 
+The static-analysis suite's wall time is printed (and gated against its
+declared 30s CPU budget, ``ANALYSIS_BUDGET_S``) alongside the throughput
+ratios: lint-time checks only stay in the pre-merge loop while they stay
+cheap, so their cost is tracked like the perf budgets.
+
   PYTHONPATH=src python -m benchmarks.check_drift
 """
 from __future__ import annotations
@@ -31,6 +36,7 @@ import json
 import sys
 
 DRIFT_FACTOR = 2.5
+ANALYSIS_BUDGET_S = 30.0
 
 
 def _host_line(record: dict) -> str:
@@ -90,6 +96,20 @@ def main() -> None:
           f"fresh {_compile_line(fresh_rec)}")
 
     failures = []
+
+    # lint-time budget: the repro.analysis suite (all three passes over
+    # src/) must stay under its declared CPU budget or it falls out of the
+    # pre-merge loop
+    from repro.analysis import run_all
+    _, timing = run_all()
+    per_pass = "  ".join(f"{k}={v:.2f}s" for k, v in timing.items()
+                         if k != "total")
+    verdict = "FAIL" if timing["total"] > ANALYSIS_BUDGET_S else "ok"
+    print(f"# analysis_runtime: {timing['total']:.2f}s of "
+          f"{ANALYSIS_BUDGET_S:.0f}s budget [{per_pass}] [{verdict}]")
+    if timing["total"] > ANALYSIS_BUDGET_S:
+        failures.append("analysis_runtime")
+
     for name in sorted(baseline.keys() & fresh.keys()):
         ratio = baseline[name] / fresh[name]
         verdict = "FAIL" if ratio > DRIFT_FACTOR else "ok"
@@ -100,7 +120,8 @@ def main() -> None:
     for name in sorted(baseline.keys() - fresh.keys()):
         print(f"# drift {name}: skipped (absent from fresh run)")
     if failures:
-        print(f"# benchmark drift >{DRIFT_FACTOR}x on: {', '.join(failures)}",
+        print(f"# budget drift (throughput >{DRIFT_FACTOR}x, analysis "
+              f">{ANALYSIS_BUDGET_S:.0f}s) on: {', '.join(failures)}",
               file=sys.stderr)
         sys.exit(1)
 

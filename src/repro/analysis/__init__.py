@@ -1,0 +1,16 @@
+"""`repro.analysis` — static checks for the repo's reproducibility
+invariants: PRNG key discipline (KEY*), jit/pallas trace hygiene (TRC*),
+and whole-zoo shape contracts via `jax.eval_shape` (SHP*).
+
+Run as `python -m repro.analysis` (see `--help`); CI runs it with
+`--fail-on-new` against the committed `baseline.json`.
+"""
+from repro.analysis.findings import (CLEAN_SUBTREES, Finding,
+                                     assert_clean_subtrees, load_baseline,
+                                     sort_findings, split_by_baseline,
+                                     write_baseline)
+from repro.analysis.runner import DEFAULT_BASELINE, repo_root, run_all
+
+__all__ = ["CLEAN_SUBTREES", "DEFAULT_BASELINE", "Finding",
+           "assert_clean_subtrees", "load_baseline", "repo_root", "run_all",
+           "sort_findings", "split_by_baseline", "write_baseline"]

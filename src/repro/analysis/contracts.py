@@ -1,0 +1,79 @@
+"""Shape-contract pass: abstract-eval every registered entry point.
+
+`jax.eval_shape` traces the real code with ShapeDtypeStructs — zero FLOPs,
+zero host<->device traffic — so the whole detector, the MC engines and the
+QAT step are type-checked end to end in well under a second each.  Rules:
+
+  SHP001  a contract raised while tracing (shape error, broken config,
+          signature drift — whatever `eval_shape` surfaced)
+  SHP002  the contract traced but the output shape/dtype/tree disagrees
+          with the declared expectation
+  SHP003  an arch marked "live" in `configs.registry.ARCH_STATUS` has no
+          shape contract — live code the pass cannot vouch for
+  SHP004  a registered arch missing from ARCH_STATUS — quarantine status
+          must be EXPLICIT (the model-zoo satellite of this PR): the pass
+          never silently skips an arch
+"""
+from __future__ import annotations
+
+import traceback
+from typing import List
+
+from repro.analysis.findings import Finding
+from repro.analysis.registry import shape_contracts
+
+REGISTRY_FILE = "src/repro/configs/registry.py"
+VALID_STATUSES = ("live", "legacy")
+
+
+def run_contract_pass() -> List[Finding]:
+    from repro.configs.registry import ARCH_STATUS, list_archs
+
+    findings: List[Finding] = []
+    known_archs = list(list_archs()) + ["yolo-irc"]
+    for arch in known_archs:
+        status = ARCH_STATUS.get(arch)
+        if status not in VALID_STATUSES:
+            findings.append(Finding(
+                rule="SHP004", file=REGISTRY_FILE, line=0,
+                message=f"arch {arch!r} has no liveness status "
+                        f"(got {status!r})",
+                hint="add it to ARCH_STATUS as 'live' or 'legacy' — the "
+                     "shape pass never skips an arch silently"))
+    for arch, status in ARCH_STATUS.items():
+        if arch not in known_archs:
+            findings.append(Finding(
+                rule="SHP004", file=REGISTRY_FILE, line=0,
+                message=f"ARCH_STATUS entry {arch!r} is not a registered "
+                        f"arch",
+                hint="remove the stale entry or register the arch"))
+
+    contracts = shape_contracts()
+    covered = {c.arch for c in contracts if c.arch}
+    for arch in known_archs:
+        if ARCH_STATUS.get(arch) == "live" and arch not in covered:
+            findings.append(Finding(
+                rule="SHP003", file=REGISTRY_FILE, line=0,
+                message=f"live arch {arch!r} has no shape contract",
+                hint="declare one in repro.analysis.registry."
+                     "shape_contracts()"))
+
+    for c in contracts:
+        try:
+            mismatch = c.run()
+        except Exception as e:                        # noqa: BLE001
+            tb = traceback.format_exc().strip().splitlines()[-1]
+            findings.append(Finding(
+                rule="SHP001", file=c.file, line=0,
+                message=f"contract {c.name} raised under eval_shape: "
+                        f"{type(e).__name__}: {e}".splitlines()[0][:300],
+                hint=f"reproduce with jax.eval_shape on the declared spec "
+                     f"({tb[:120]})"))
+            continue
+        if mismatch:
+            findings.append(Finding(
+                rule="SHP002", file=c.file, line=0,
+                message=f"contract {c.name}: {mismatch}",
+                hint="either the entry point or the declared spec is wrong "
+                     "— fix the regression or update the contract"))
+    return findings

@@ -1,0 +1,247 @@
+"""Declared entry points for the analysis passes.
+
+Two registries live here:
+
+`JIT_ENTRY_POINTS` — cross-module jit roots for the trace-hygiene pass.
+The pass discovers `@jax.jit` / `pallas_call` roots statically, but a
+function that is only ever called FROM a jitted function in another module
+(e.g. `IRCDetector.apply`, invoked by `repro.mc.detector_mc._ensemble_forward`)
+is invisible to same-module call-graph reachability.  Declare those here:
+file (repo-relative) -> set of function qualnames to treat as traced roots.
+
+`shape_contracts()` — the shape-contract registry for the abstract-eval
+pass.  Each `ShapeContract.run` builds abstract inputs (ShapeDtypeStructs),
+runs the real entry point under `jax.eval_shape` (zero FLOPs, full tracing)
+and returns None on success or a mismatch description.  Adding a new jit
+entry point = appending one contract here (see README "Static analysis").
+
+`configs.registry.ARCH_STATUS` decides which model-zoo archs the pass may
+treat as quarantined: every registered arch MUST carry a status ("live"
+archs need a contract below; "legacy" archs get a smoke-geometry eval_shape
+so drift in quarantined code is still caught, just reported as legacy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Set
+
+JIT_ENTRY_POINTS: Dict[str, Set[str]] = {
+    # called from repro.mc.detector_mc._ensemble_forward (jit) and the QAT
+    # loss closure inside make_det_qat_step (grad+jit in callers)
+    "src/repro/models/detector.py": {"IRCDetector.apply"},
+    # called from _fused_chunk_metrics (jit) in the same package but via
+    # from-import at function scope — declare rather than rely on luck
+    "src/repro/mc/ensemble.py": {"sample_ensemble",
+                                 "sample_ensemble_with_keys"},
+    # crossbar forward is the body every jitted MC path inlines
+    "src/repro/core/crossbar.py": {"crossbar_apply"},
+    "src/repro/core/nonideal.py": {"resolve_sa", "sensed_diff"},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeContract:
+    """One abstract-eval contract: `run()` returns None or a mismatch."""
+    name: str           # e.g. "detector.apply[train,ternary-smoke]"
+    file: str           # repo-relative file the contract protects
+    run: Callable[[], Optional[str]]
+    arch: Optional[str] = None   # registry arch this contract covers
+
+
+def _struct(shape, dtype="float32"):
+    import jax
+    import jax.numpy as jnp
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _expect(out, shape, dtype, what: str) -> Optional[str]:
+    if tuple(out.shape) != tuple(shape):
+        return f"{what}: expected shape {tuple(shape)}, got {tuple(out.shape)}"
+    if str(out.dtype) != dtype:
+        return f"{what}: expected dtype {dtype}, got {out.dtype}"
+    return None
+
+
+def _det_and_params(scheme: str):
+    """Smoke-geometry detector + ABSTRACT params (init under eval_shape)."""
+    import jax
+    from repro.configs import yolo_irc
+    from repro.models.detector import IRCDetector
+    det = IRCDetector(yolo_irc.smoke(scheme))
+    params = jax.eval_shape(det.init, _struct((2,), "uint32"))
+    return det, params
+
+
+def _det_head(det):
+    cfg = det.cfg
+    gh = cfg.img_hw[0] // cfg.strides
+    gw = cfg.img_hw[1] // cfg.strides
+    return gh, gw, cfg.n_anchors * (5 + cfg.n_classes)
+
+
+def _contract_det_forward(scheme: str, mode: str) -> Optional[str]:
+    import jax
+    from repro.core import NonidealConfig
+    det, params = _det_and_params(scheme)
+    B = 2
+    images = _struct((B, *det.cfg.img_hw, 3))
+    cfg_ni = NonidealConfig.none() if mode == "train" else NonidealConfig.all()
+
+    def fwd(p, x, k):
+        return det.apply(p, x, mode=mode, key=k, cfg_ni=cfg_ni)
+    out = jax.eval_shape(fwd, params, images, _struct((2,), "uint32"))
+    gh, gw, ho = _det_head(det)
+    return _expect(out, (B, gh, gw, ho), "float32",
+                   f"detector.apply[{mode},{scheme}]")
+
+
+def _contract_det_ensemble(n_chips: int) -> Optional[str]:
+    import jax
+    from repro.core import NonidealConfig
+    from repro.mc.detector_mc import build_detector_ensemble
+    det, params = _det_and_params("ternary")
+    B = 2
+    images = _struct((B, *det.cfg.img_hw, 3))
+
+    def fwd(p, x, k):
+        ens = build_detector_ensemble(k, det, p, n_chips,
+                                      cfg=NonidealConfig.all())
+        return det.apply(p, x, mode="ensemble", ensemble=ens,
+                         cfg_ni=NonidealConfig.all())
+    out = jax.eval_shape(fwd, params, images, _struct((2,), "uint32"))
+    gh, gw, ho = _det_head(det)
+    return _expect(out, (n_chips, B, gh, gw, ho), "float32",
+                   f"detector.apply[ensemble x{n_chips}]")
+
+
+def _contract_qat_step(train_chips: int) -> Optional[str]:
+    import jax
+    from repro.optim import adamw_init
+    from repro.train.steps import make_det_qat_step
+    det, params = _det_and_params("ternary")
+    opt = jax.eval_shape(adamw_init, params)
+    step = make_det_qat_step(det, train_chips=train_chips)
+    B = 2
+    gh, gw, _ = _det_head(det)
+    targets = {"txywh": _struct((B, gh, gw, det.cfg.n_anchors, 4)),
+               "obj": _struct((B, gh, gw, det.cfg.n_anchors)),
+               "cls": _struct((B, gh, gw, det.cfg.n_anchors), "int32")}
+    out = jax.eval_shape(
+        step, params, opt, _struct((B, *det.cfg.img_hw, 3)), targets,
+        _struct((), "float32"), _struct((2,), "uint32"),
+        _struct((2,), "uint32"))
+    new_params, new_opt, loss = out
+    for got, want, what in ((new_params, params, "params"),
+                            (new_opt, opt, "opt")):
+        got_td = jax.tree.structure(got)
+        want_td = jax.tree.structure(want)
+        if got_td != want_td:
+            return (f"qat_step[chips={train_chips}]: {what} tree changed "
+                    f"({want_td} -> {got_td})")
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            if a.shape != b.shape or a.dtype != b.dtype:
+                return (f"qat_step[chips={train_chips}]: {what} leaf "
+                        f"{b.shape}/{b.dtype} -> {a.shape}/{a.dtype}")
+    return _expect(loss, (), "float32", f"qat_step[chips={train_chips}] loss")
+
+
+def _contract_ensemble_apply(kernel: bool) -> Optional[str]:
+    import jax
+    from repro.core import NonidealConfig
+    from repro.core.mapping import ternary_planes
+    from repro.mc import engine as mc_engine
+    from repro.mc.ensemble import sample_ensemble
+    n_chips, batch, fan_in, n_out, bias_rows = 3, 4, 60, 20, 16
+    cfg = NonidealConfig.all()
+
+    def fwd(k, w, x):
+        mapped = ternary_planes(w, bias_rows=bias_rows)
+        ens = sample_ensemble(k, mapped, n_chips, cfg=cfg)
+        if kernel:
+            return mc_engine.ensemble_apply_kernel(ens, x, cfg=cfg)
+        return mc_engine.ensemble_apply(ens, x, cfg=cfg)
+    out = jax.eval_shape(fwd, _struct((2,), "uint32"),
+                         _struct((fan_in, n_out)),
+                         _struct((batch, fan_in)))
+    name = "ensemble_apply_kernel" if kernel else "ensemble_apply"
+    return _expect(out, (n_chips, batch, n_out), "float32", name)
+
+
+def _contract_fused_chunk_metrics() -> Optional[str]:
+    import jax
+    from repro.core import NonidealConfig
+    from repro.core.macro import DEFAULT_MACRO
+    from repro.mc.engine import _fused_chunk_metrics
+    n_chips, batch, fan_in, n_out, bias_rows = 3, 4, 60, 20, 16
+    rows = fan_in + bias_rows
+    out = jax.eval_shape(
+        lambda k, ids, x, gp, gn, ref: _fused_chunk_metrics(
+            k, ids, x, gp, gn, ref, scheme="ternary", fan_in=fan_in,
+            cfg=NonidealConfig.all(), spec=DEFAULT_MACRO,
+            accumulation="single_shot", partial_rows=256,
+            sa_extra_units=0.0),
+        _struct((2,), "uint32"), _struct((n_chips,), "uint32"),
+        _struct((batch, fan_in)), _struct((rows, n_out)),
+        _struct((rows, n_out)), _struct((n_chips, batch, n_out)))
+    for mname in ("bit_agreement", "ones_fraction"):
+        if mname not in out:
+            return f"_fused_chunk_metrics: missing metric {mname!r}"
+        err = _expect(out[mname], (n_chips,), "float32",
+                      f"_fused_chunk_metrics[{mname}]")
+        if err:
+            return err
+    return None
+
+
+def _contract_lm_smoke(arch: str) -> Optional[str]:
+    import jax
+    from repro.configs.registry import get_config
+    from repro.models import LM
+    cfg = get_config(arch, "smoke")
+    lm = LM(cfg)
+    params = jax.eval_shape(lm.init, _struct((2,), "uint32"))
+    B, S = 2, 16
+    toks = _struct((B, S), "int32")
+    out = jax.eval_shape(lambda p, t: lm.apply(p, t, remat="none")[0],
+                         params, toks)
+    return _expect(out, (B, S, cfg.vocab_size), "float32",
+                   f"LM.apply[{arch}-smoke]")
+
+
+def shape_contracts() -> List[ShapeContract]:
+    """Every declared entry-point contract, detector/MC first."""
+    from repro.configs.registry import ARCH_STATUS, list_archs
+
+    det_file = "src/repro/models/detector.py"
+    mc_file = "src/repro/mc/engine.py"
+    steps_file = "src/repro/train/steps.py"
+    det = "yolo-irc"
+    contracts = [
+        ShapeContract("detector.apply[train,ternary]", det_file,
+                      lambda: _contract_det_forward("ternary", "train"), det),
+        ShapeContract("detector.apply[train,binary]", det_file,
+                      lambda: _contract_det_forward("binary", "train"), det),
+        ShapeContract("detector.apply[eval,ternary]", det_file,
+                      lambda: _contract_det_forward("ternary", "eval"), det),
+        ShapeContract("detector.apply[eval,binary]", det_file,
+                      lambda: _contract_det_forward("binary", "eval"), det),
+        ShapeContract("detector.apply[ensemble x4]", det_file,
+                      lambda: _contract_det_ensemble(4), det),
+        ShapeContract("qat_step[chips=1]", steps_file,
+                      lambda: _contract_qat_step(1), det),
+        ShapeContract("qat_step[chips=4]", steps_file,
+                      lambda: _contract_qat_step(4), det),
+        ShapeContract("ensemble_apply", mc_file,
+                      lambda: _contract_ensemble_apply(False), det),
+        ShapeContract("ensemble_apply_kernel", mc_file,
+                      lambda: _contract_ensemble_apply(True), det),
+        ShapeContract("_fused_chunk_metrics", mc_file,
+                      lambda: _contract_fused_chunk_metrics(), det),
+    ]
+    for arch in list_archs():
+        if ARCH_STATUS.get(arch) == "legacy":
+            contracts.append(ShapeContract(
+                f"LM.apply[{arch}-smoke] (legacy)",
+                "src/repro/configs/registry.py",
+                lambda a=arch: _contract_lm_smoke(a), arch))
+    return contracts

@@ -1,0 +1,260 @@
+"""Trace-hygiene pass (AST): recompile and cache-miss hazards inside
+jit/pallas-reachable code.
+
+PR 4 split `compile_s` from steady-state rates; those numbers are only
+meaningful if traced code doesn't silently retrace or sync to host.  This
+pass computes the set of functions reachable from a `jax.jit` /
+`pallas_call` root (decorators, `functools.partial(jax.jit, ...)`,
+registered entry points in `repro.analysis.registry.JIT_ENTRY_POINTS`,
+plus transitive same-module calls) and flags, inside that set:
+
+  TRC101  Python `if`/`while` whose condition contains a `jax.numpy` /
+          `jax.lax` call: under trace the condition is a tracer and either
+          raises ConcretizationError or (via `static_argnames`) forces a
+          retrace per value.
+  TRC102  host syncs — `.item()`, `float()`/`int()`/`bool()` over a jnp
+          expression, `np.asarray`/`np.array` on traced values: each one
+          blocks dispatch and wrecks steady-state timing.
+  TRC103  jit-boundary signature bugs: `static_argnames` naming a
+          parameter that doesn't exist (the arg silently stays traced),
+          and mutable default values (list/dict/set) on jitted functions
+          (unhashable when static; aliased state when not).
+  TRC104  a jit-reachable function reading a module-level mutable literal
+          (dict/list/set): the value is baked in at trace time, so later
+          mutation silently diverges from the compiled version.
+
+Reachability is intentionally same-module: cross-module jit edges must be
+declared in `JIT_ENTRY_POINTS` (see README "Static analysis").
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis._astutil import (canonical, collect_import_aliases,
+                                     dotted_name, walk_functions)
+from repro.analysis.findings import Finding
+
+TRACED_CALL_PREFIXES = ("jax.numpy.", "jax.lax.", "jax.nn.", "jax.scipy.")
+JIT_WRAPPERS = ("jax.jit", "jax.pmap", "jax.experimental.pjit.pjit")
+PALLAS_CALL = "pallas_call"
+
+
+def _is_jnp_rooted(expr: ast.AST, aliases) -> bool:
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call):
+            path = canonical(node.func, aliases)
+            if path and path.startswith(TRACED_CALL_PREFIXES):
+                return True
+    return False
+
+
+class TraceHygienePass:
+    def __init__(self, path: str, source: str,
+                 extra_roots: Optional[Set[str]] = None):
+        self.path = path
+        self.tree = ast.parse(source, filename=path)
+        self.aliases = collect_import_aliases(self.tree)
+        self.extra_roots = extra_roots or set()
+        self.findings: List[Finding] = []
+        self.functions: Dict[str, ast.AST] = dict(walk_functions(self.tree))
+
+    # -------------------------------------------------------- reachability
+    def _decorator_paths(self, fn) -> List[str]:
+        paths = []
+        for dec in fn.decorator_list:
+            node = dec.func if isinstance(dec, ast.Call) else dec
+            p = canonical(node, self.aliases)
+            if p:
+                paths.append(p)
+            # functools.partial(jax.jit, ...) — look one level in
+            if isinstance(dec, ast.Call) and p == "functools.partial" \
+                    and dec.args:
+                inner = canonical(dec.args[0], self.aliases)
+                if inner:
+                    paths.append(inner)
+        return paths
+
+    def _jit_kwargs(self, fn) -> List[ast.keyword]:
+        kws = []
+        for dec in fn.decorator_list:
+            if not isinstance(dec, ast.Call):
+                continue
+            p = canonical(dec.func, self.aliases)
+            if p in JIT_WRAPPERS or p == "functools.partial":
+                kws.extend(dec.keywords)
+        return kws
+
+    def _roots(self) -> Set[str]:
+        roots = set(self.extra_roots)
+        for qualname, fn in self.functions.items():
+            decs = self._decorator_paths(fn)
+            if any(d in JIT_WRAPPERS for d in decs):
+                roots.add(qualname)
+        # kernels handed to pl.pallas_call(kernel, ...) anywhere
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                p = canonical(node.func, self.aliases)
+                if p and p.split(".")[-1] == PALLAS_CALL:
+                    for arg in node.args[:1]:
+                        name = dotted_name(arg)
+                        if name:
+                            roots.update(q for q in self.functions
+                                         if q == name or
+                                         q.endswith("." + name.split(".")[-1])
+                                         and name.startswith("self."))
+                            if name in self.functions:
+                                roots.add(name)
+        return {r for r in roots if r in self.functions}
+
+    def _local_callees(self, qualname: str) -> Set[str]:
+        fn = self.functions[qualname]
+        cls_prefix = qualname.rsplit(".", 1)[0] + "." if "." in qualname \
+            else ""
+        out = set()
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name is None:
+                continue
+            if name in self.functions:
+                out.add(name)
+            elif name.startswith("self.") and cls_prefix:
+                m = cls_prefix + name[len("self."):]
+                if m in self.functions:
+                    out.add(m)
+        return out
+
+    def reachable(self) -> Set[str]:
+        seen: Set[str] = set()
+        stack = list(self._roots())
+        while stack:
+            q = stack.pop()
+            if q in seen:
+                continue
+            seen.add(q)
+            stack.extend(self._local_callees(q) - seen)
+        return seen
+
+    # -------------------------------------------------------------- rules
+    def _check_body(self, qualname: str, fn: ast.AST) -> None:
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)) \
+                    and _is_jnp_rooted(node.test, self.aliases):
+                kw = "while" if isinstance(node, ast.While) else "if"
+                self.findings.append(Finding(
+                    rule="TRC101", file=self.path, line=node.lineno,
+                    message=f"Python `{kw}` on a traced jnp value in "
+                            f"jit-reachable `{qualname}`",
+                    hint="use jnp.where / jax.lax.cond / jax.lax.select, "
+                         "or hoist the decision to a static argument"))
+            elif isinstance(node, ast.Call):
+                self._check_host_sync(qualname, node)
+
+    def _check_host_sync(self, qualname: str, call: ast.Call) -> None:
+        path = canonical(call.func, self.aliases)
+        if isinstance(call.func, ast.Attribute) and call.func.attr == "item" \
+                and not call.args:
+            self.findings.append(Finding(
+                rule="TRC102", file=self.path, line=call.lineno,
+                message=f".item() host sync in jit-reachable `{qualname}`",
+                hint="keep values on device; sync once outside jit"))
+        elif path in ("float", "int", "bool") and call.args \
+                and _is_jnp_rooted(call.args[0], self.aliases):
+            self.findings.append(Finding(
+                rule="TRC102", file=self.path, line=call.lineno,
+                message=f"{path}() over a jnp expression in jit-reachable "
+                        f"`{qualname}` forces a host sync",
+                hint="stay in jnp dtypes inside traced code"))
+        elif path in ("numpy.asarray", "numpy.array"):
+            self.findings.append(Finding(
+                rule="TRC102", file=self.path, line=call.lineno,
+                message=f"numpy conversion in jit-reachable `{qualname}` "
+                        f"pulls the value to host",
+                hint="use jnp.asarray, or move the conversion outside jit"))
+
+    def _check_jit_boundary(self, qualname: str, fn: ast.AST) -> None:
+        params = [a.arg for a in (*fn.args.posonlyargs, *fn.args.args,
+                                  *fn.args.kwonlyargs)]
+        for kw in self._jit_kwargs(fn):
+            if kw.arg not in ("static_argnames", "static_argnums"):
+                continue
+            names: List[str] = []
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                names = [v.value]
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                names = [e.value for e in v.elts
+                         if isinstance(e, ast.Constant)
+                         and isinstance(e.value, str)]
+            for n in names:
+                if n not in params:
+                    self.findings.append(Finding(
+                        rule="TRC103", file=self.path, line=fn.lineno,
+                        message=f"static_argnames of `{qualname}` names "
+                                f"`{n}` which is not a parameter — the "
+                                f"argument silently stays traced",
+                        hint="match static_argnames to the signature"))
+        for default in (*fn.args.defaults, *fn.args.kw_defaults):
+            if isinstance(default, (ast.Dict, ast.List, ast.Set)):
+                self.findings.append(Finding(
+                    rule="TRC103", file=self.path, line=default.lineno,
+                    message=f"mutable default argument on jit-reachable "
+                            f"`{qualname}`",
+                    hint="default to None and build inside, or use a "
+                         "frozen/hashable value"))
+
+    def _mutable_globals(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for stmt in self.tree.body:
+            if isinstance(stmt, ast.Assign) \
+                    and isinstance(stmt.value, (ast.Dict, ast.List, ast.Set,
+                                                ast.ListComp, ast.DictComp,
+                                                ast.SetComp)):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        out[t.id] = stmt.lineno
+        return out
+
+    def _check_global_capture(self, qualname: str, fn: ast.AST,
+                              mutables: Dict[str, int]) -> None:
+        local: Set[str] = {a.arg for a in (*fn.args.posonlyargs,
+                                           *fn.args.args,
+                                           *fn.args.kwonlyargs)}
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    if isinstance(t, ast.Name):
+                        local.add(t.id)
+        reported: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                    and node.id in mutables and node.id not in local \
+                    and node.id not in reported:
+                reported.add(node.id)
+                self.findings.append(Finding(
+                    rule="TRC104", file=self.path, line=node.lineno,
+                    message=f"jit-reachable `{qualname}` reads module-level "
+                            f"mutable `{node.id}`: its value is baked in at "
+                            f"trace time",
+                    hint="pass it as an argument (static if config-like) or "
+                         "freeze it into a tuple/immutable constant"))
+
+    # -------------------------------------------------------------- driver
+    def run(self) -> List[Finding]:
+        reach = self.reachable()
+        mutables = self._mutable_globals()
+        for qualname in sorted(reach):
+            fn = self.functions[qualname]
+            self._check_body(qualname, fn)
+            self._check_jit_boundary(qualname, fn)
+            self._check_global_capture(qualname, fn, mutables)
+        return self.findings
+
+
+def run_trace_pass(path: str, source: str,
+                   extra_roots: Optional[Set[str]] = None) -> List[Finding]:
+    return TraceHygienePass(path, source, extra_roots).run()

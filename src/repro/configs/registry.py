@@ -1,7 +1,8 @@
-"""Architecture registry: ``--arch <id>`` resolution for launch tools."""
+"""Architecture registry: ``--arch <id>`` resolution for launch tools,
+plus the explicit liveness map the static-analysis shape pass keys on."""
 from __future__ import annotations
 
-from typing import List
+from typing import Dict, List
 
 from repro.models.lm_config import LMConfig
 from repro.configs import (hymba_1p5b, phi3_medium_14b, deepseek_67b,
@@ -13,6 +14,19 @@ _MODULES = {
     m.ARCH_ID: m for m in (
         hymba_1p5b, phi3_medium_14b, deepseek_67b, gemma2_27b, llama3_405b,
         qwen3_moe_235b, kimi_k2_1t, musicgen_medium, rwkv6_3b, chameleon_34b)
+}
+
+# Liveness of every registered arch — `repro.analysis` (SHP003/SHP004)
+# refuses to run if an arch is missing here, so quarantine is explicit:
+#   "live"   — on the paper's detector/MC path; must carry shape contracts
+#              in repro.analysis.registry.shape_contracts()
+#   "legacy" — LM model-zoo weight kept for its smoke tests only; NOT
+#              reachable from the detector path or any launch CLI it ships;
+#              the shape pass still abstract-evals its smoke config so
+#              quarantined code cannot rot silently
+ARCH_STATUS: Dict[str, str] = {
+    "yolo-irc": "live",
+    **{arch: "legacy" for arch in _MODULES},
 }
 
 

@@ -49,6 +49,21 @@ class DetectorConfig:
     partial_rows: int = 212                   # ~300uA limit at nominal V_WL
     dtype: Any = jnp.float32
 
+    def __post_init__(self):
+        # The PRNG layer_id lattice `s * 10 + b` (declared in
+        # repro.analysis.keys.DECLARED_FOLD_LATTICES) is injective only
+        # while every stage has fewer than 10 blocks; a deeper stage would
+        # silently alias chip noise across layers.
+        if any(nb >= 10 for nb in self.blocks_per_stage):
+            raise ValueError(
+                f"blocks_per_stage {self.blocks_per_stage} breaks the "
+                f"s*10+b layer_id key lattice (needs every stage < 10 "
+                f"blocks)")
+        if len(self.blocks_per_stage) != len(self.stage_channels):
+            raise ValueError(
+                f"blocks_per_stage {self.blocks_per_stage} and "
+                f"stage_channels {self.stage_channels} must align")
+
     @property
     def strides(self) -> int:
         return 2 ** (len(self.stage_channels) + 1)   # stem /2 + pools

@@ -45,16 +45,23 @@ class ServeEngine:
         self.max_len = max_len
         self.eos_id = eos_id
         self.temperature = temperature
-        self.key = jax.random.PRNGKey(seed)
+        # Root key only; sampling keys are derived by STABLE coordinates
+        # (wave index, decode step) — never by a split chain threaded
+        # through mutable state, which would make a request's draws depend
+        # on how many tokens earlier requests happened to generate
+        # (repro.analysis rule KEY004).
+        self._root_key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(lm.decode_step)
         self.obs = as_runlog(obs)
         self.prefill_timer = PhaseTimer("serve_prefill", unit="tokens")
         self.decode_timer = PhaseTimer("serve_decode", unit="tokens")
         self._waves = 0
 
-    def _sample(self, logits: jax.Array) -> np.ndarray:
+    def _sample(self, logits: jax.Array, *, wave: int,
+                step: int) -> np.ndarray:
         if self.temperature > 0:
-            self.key, k = jax.random.split(self.key)
+            k = jax.random.fold_in(
+                jax.random.fold_in(self._root_key, wave), step)
             return np.asarray(jax.random.categorical(
                 k, logits[:, -1, :] / self.temperature), np.int32)
         return np.asarray(jnp.argmax(logits[:, -1, :], -1), np.int32)
@@ -82,8 +89,8 @@ class ServeEngine:
             out_tokens: List[List[int]] = [[] for _ in wave]
             finished = [False] * len(wave)
             with self.decode_timer.lap() as lap:
-                cur = self._sample(logits)
-                for _ in range(max_new_tokens):
+                cur = self._sample(logits, wave=self._waves, step=0)
+                for step in range(max_new_tokens):
                     for s in range(len(wave)):
                         if not finished[s]:
                             out_tokens[s].append(int(cur[s]))
@@ -94,7 +101,8 @@ class ServeEngine:
                         break
                     logits, cache = self._decode(
                         self.params, jnp.asarray(cur[:, None]), cache)
-                    cur = self._sample(logits)
+                    cur = self._sample(logits, wave=self._waves,
+                                       step=step + 1)
                 lap.items = sum(len(t) for t in out_tokens)
             self._waves += 1
             self.obs.log_event(

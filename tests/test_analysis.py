@@ -1,0 +1,484 @@
+"""Tests for `repro.analysis`: per-rule good/bad fixtures, baseline
+semantics (exit codes of `python -m repro.analysis`), shape-contract
+catching, and the runtime guards the passes are paired with."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Finding, assert_clean_subtrees, load_baseline,
+                            split_by_baseline, write_baseline)
+from repro.analysis.keys import run_key_pass
+from repro.analysis.trace import run_trace_pass
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def keys(src: str):
+    return run_key_pass("fixture.py", textwrap.dedent(src))
+
+
+def trace(src: str, roots=None):
+    return run_trace_pass("fixture.py", textwrap.dedent(src), roots)
+
+
+def rules(findings):
+    return [f.rule for f in findings]
+
+
+# --------------------------------------------------------------- KEY rules
+
+class TestKeyDiscipline:
+    def test_key001_double_consumption(self):
+        out = keys("""
+            import jax
+            def f(key, shape):
+                a = jax.random.normal(key, shape)
+                b = jax.random.uniform(key, shape)
+                return a + b
+        """)
+        assert rules(out) == ["KEY001"]
+
+    def test_key001_clean_after_split(self):
+        assert keys("""
+            import jax
+            def f(key, shape):
+                k1, k2 = jax.random.split(key)
+                return jax.random.normal(k1, shape) + \\
+                    jax.random.uniform(k2, shape)
+        """) == []
+
+    def test_key001_rebinding_resets(self):
+        assert keys("""
+            import jax
+            def f(key, shape):
+                a = jax.random.normal(key, shape)
+                key = jax.random.fold_in(key, 1)
+                return a + jax.random.normal(key, shape)
+        """) == []
+
+    def test_key001_exclusive_branches_not_flagged(self):
+        assert keys("""
+            import jax
+            def f(key, shape, flag):
+                if flag:
+                    return jax.random.normal(key, shape)
+                else:
+                    return jax.random.uniform(key, shape)
+        """) == []
+
+    def test_key001_loop_reuse(self):
+        out = keys("""
+            import jax
+            def f(key, xs):
+                acc = []
+                for x in xs:
+                    acc.append(jax.random.normal(key, x.shape))
+                return acc
+        """)
+        assert rules(out) == ["KEY001"]
+        assert "every iteration replays" in out[0].message
+
+    def test_key001_loop_fold_in_clean(self):
+        assert keys("""
+            import jax
+            def f(key, xs):
+                acc = []
+                for i, x in enumerate(xs):
+                    k = jax.random.fold_in(key, i)
+                    acc.append(jax.random.normal(k, x.shape))
+                return acc
+        """) == []
+
+    def test_key001_sees_through_import_alias(self):
+        out = keys("""
+            import jax.random as jr
+            def f(key, shape):
+                return jr.normal(key, shape) + jr.normal(key, shape)
+        """)
+        assert rules(out) == ["KEY001"]
+
+    def test_key002_wall_clock_key(self):
+        out = keys("""
+            import time
+            import jax
+            def f():
+                return jax.random.PRNGKey(int(time.time()))
+        """)
+        assert rules(out) == ["KEY002"]
+
+    def test_key002_np_random_fold(self):
+        out = keys("""
+            import jax
+            import numpy as np
+            def f(key):
+                return jax.random.fold_in(key, np.random.randint(1 << 20))
+        """)
+        assert rules(out) == ["KEY002"]
+
+    def test_key002_seeded_root_clean(self):
+        assert keys("""
+            import jax
+            def f(seed):
+                return jax.random.PRNGKey(seed)
+        """) == []
+
+    def test_key003_constant_collision(self):
+        out = keys("""
+            import jax
+            def f(key):
+                a = jax.random.fold_in(key, 3)
+                b = jax.random.fold_in(key, 3)
+                return a, b
+        """)
+        assert rules(out) == ["KEY003"]
+
+    def test_key003_distinct_salts_clean(self):
+        assert keys("""
+            import jax
+            def f(key):
+                return jax.random.fold_in(key, 1), jax.random.fold_in(key, 2)
+        """) == []
+
+    def test_key003_undeclared_lattice(self):
+        out = keys("""
+            import jax
+            def f(key, s, b):
+                return jax.random.fold_in(key, s * 7 + b)
+        """)
+        assert rules(out) == ["KEY003"]
+
+    def test_key003_declared_lattice_clean(self):
+        # the detector's s*10+b schedule is declared
+        assert keys("""
+            import jax
+            def f(key, s, b):
+                return jax.random.fold_in(key, s * 10 + b)
+        """) == []
+
+    def test_key004_mutable_key_state(self):
+        out = keys("""
+            import jax
+            class Engine:
+                def sample(self, logits):
+                    self.key, k = jax.random.split(self.key)
+                    return jax.random.categorical(k, logits)
+        """)
+        assert rules(out) == ["KEY004"]
+
+    def test_key004_stateless_fold_clean(self):
+        assert keys("""
+            import jax
+            class Engine:
+                def sample(self, logits, wave, step):
+                    k = jax.random.fold_in(
+                        jax.random.fold_in(self.root, wave), step)
+                    return jax.random.categorical(k, logits)
+        """) == []
+
+
+# --------------------------------------------------------------- TRC rules
+
+class TestTraceHygiene:
+    def test_trc101_tracer_branch(self):
+        out = trace("""
+            import jax
+            import jax.numpy as jnp
+            @jax.jit
+            def f(x):
+                if jnp.sum(x) > 0:
+                    return x
+                return -x
+        """)
+        assert rules(out) == ["TRC101"]
+
+    def test_trc101_where_clean(self):
+        assert trace("""
+            import jax
+            import jax.numpy as jnp
+            @jax.jit
+            def f(x):
+                return jnp.where(jnp.sum(x) > 0, x, -x)
+        """) == []
+
+    def test_trc101_static_python_branch_clean(self):
+        # branching on a plain Python value is fine (static argument)
+        assert trace("""
+            import jax
+            @jax.jit
+            def f(x, per_chip):
+                if per_chip:
+                    return x
+                return -x
+        """) == []
+
+    def test_trc101_unreachable_not_flagged(self):
+        # same body, but nothing marks it jit-reachable
+        assert trace("""
+            import jax.numpy as jnp
+            def f(x):
+                if jnp.sum(x) > 0:
+                    return x
+                return -x
+        """) == []
+
+    def test_trc101_transitive_callee(self):
+        out = trace("""
+            import jax
+            import jax.numpy as jnp
+            def helper(x):
+                while jnp.max(x) > 1:
+                    x = x * 0.5
+                return x
+            @jax.jit
+            def f(x):
+                return helper(x)
+        """)
+        assert rules(out) == ["TRC101"]
+
+    def test_registered_entry_point_roots(self):
+        src = """
+            import jax.numpy as jnp
+            def entry(x):
+                return float(jnp.sum(x))
+        """
+        assert trace(src) == []
+        assert rules(trace(src, roots={"entry"})) == ["TRC102"]
+
+    def test_trc102_item_and_numpy(self):
+        out = trace("""
+            import jax
+            import numpy as np
+            @jax.jit
+            def f(x):
+                y = x.item()
+                return np.asarray(x) + y
+        """)
+        assert rules(out) == ["TRC102", "TRC102"]
+
+    def test_trc103_bogus_static_argnames(self):
+        out = trace("""
+            import functools
+            import jax
+            @functools.partial(jax.jit, static_argnames=("cfg",))
+            def f(x, config):
+                return x
+        """)
+        assert rules(out) == ["TRC103"]
+
+    def test_trc103_valid_static_argnames_clean(self):
+        assert trace("""
+            import functools
+            import jax
+            @functools.partial(jax.jit, static_argnames=("cfg",))
+            def f(x, cfg):
+                return x
+        """) == []
+
+    def test_trc103_mutable_default(self):
+        out = trace("""
+            import jax
+            @jax.jit
+            def f(x, opts={}):
+                return x
+        """)
+        assert rules(out) == ["TRC103"]
+
+    def test_trc104_mutable_global_capture(self):
+        out = trace("""
+            import jax
+            _CACHE = {}
+            @jax.jit
+            def f(x):
+                return x * _CACHE.get("scale", 1.0)
+        """)
+        assert rules(out) == ["TRC104"]
+
+    def test_trc104_local_shadow_clean(self):
+        assert trace("""
+            import jax
+            _CACHE = {}
+            @jax.jit
+            def f(x):
+                _CACHE = {"scale": 2.0}
+                return x * _CACHE["scale"]
+        """) == []
+
+
+# ------------------------------------------------------ baseline semantics
+
+class TestBaseline:
+    def test_identity_is_line_free(self):
+        a = Finding("KEY001", "m.py", 10, "msg")
+        b = Finding("KEY001", "m.py", 99, "msg")
+        new, old = split_by_baseline([b], [a])
+        assert new == [] and old == [b]
+
+    def test_roundtrip(self, tmp_path):
+        f = Finding("TRC102", "m.py", 3, "sync", hint="h")
+        p = tmp_path / "b.json"
+        write_baseline(p, [f])
+        assert load_baseline(p) == [f]
+
+    def test_clean_subtrees_enforced(self):
+        errs = assert_clean_subtrees(
+            [Finding("KEY001", "src/repro/mc/engine.py", 1, "m")])
+        assert len(errs) == 1
+        assert assert_clean_subtrees(
+            [Finding("KEY001", "src/repro/serve/engine.py", 1, "m")]) == []
+
+
+BAD_FIXTURE = textwrap.dedent("""
+    import jax
+    def f(key, shape):
+        a = jax.random.normal(key, shape)
+        b = jax.random.normal(key, shape)
+        return a + b
+""")
+
+
+def run_cli(*argv, cwd=REPO):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *map(str, argv)],
+        capture_output=True, text=True, env=env, cwd=cwd)
+
+
+class TestCli:
+    """`python -m repro.analysis` exit codes: the contract CI relies on."""
+
+    def test_fail_on_new_then_baseline_then_regrow(self, tmp_path):
+        bad = tmp_path / "bad.py"
+        bad.write_text(BAD_FIXTURE)
+        bl = tmp_path / "baseline.json"
+
+        r = run_cli(bad, "--passes", "keys", "--baseline", bl)
+        assert r.returncode == 1, r.stdout + r.stderr
+        assert "KEY001" in r.stdout
+
+        r = run_cli(bad, "--passes", "keys", "--baseline", bl,
+                    "--write-baseline")
+        assert r.returncode == 0, r.stdout + r.stderr
+
+        r = run_cli(bad, "--passes", "keys", "--baseline", bl)
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "[baselined]" in r.stdout
+
+        bad.write_text(BAD_FIXTURE + textwrap.dedent("""
+            def g(key, shape):
+                for s in shape:
+                    jax.random.normal(key, (s,))
+        """))
+        r = run_cli(bad, "--passes", "keys", "--baseline", bl)
+        assert r.returncode == 1, r.stdout + r.stderr
+
+        r = run_cli(bad, "--passes", "keys", "--baseline", bl,
+                    "--no-fail-on-new")
+        assert r.returncode == 0
+
+    def test_json_artifact(self, tmp_path):
+        bad = tmp_path / "bad.py"
+        bad.write_text(BAD_FIXTURE)
+        out = tmp_path / "findings.json"
+        run_cli(bad, "--passes", "keys", "--baseline",
+                tmp_path / "b.json", "--json", out)
+        doc = json.loads(out.read_text())
+        assert [f["rule"] for f in doc["new"]] == ["KEY001"]
+        assert "keys" in doc["timing_s"]
+
+    def test_baselined_clean_subtree_exits_2(self, tmp_path):
+        bl = tmp_path / "baseline.json"
+        write_baseline(bl, [Finding("KEY001", "src/repro/mc/engine.py",
+                                    1, "grandfathered-in-clean-subtree")])
+        good = tmp_path / "good.py"
+        good.write_text("x = 1\n")
+        r = run_cli(good, "--passes", "keys", "--baseline", bl)
+        assert r.returncode == 2
+        assert "bit-exactness-critical" in r.stderr
+
+
+# ------------------------------------------------------ shape contracts
+
+class TestShapeContracts:
+    def test_repo_contracts_all_pass(self):
+        from repro.analysis.contracts import run_contract_pass
+        assert run_contract_pass() == []
+
+    def test_broken_entry_point_caught(self, monkeypatch):
+        """A deliberately broken fixture: entry point returns transposed
+        output vs its declared spec -> SHP002; a raising config -> SHP001."""
+        import jax
+        import jax.numpy as jnp
+        import repro.analysis.contracts as contracts_mod
+        from repro.analysis.registry import ShapeContract, _expect, _struct
+
+        def broken_transpose():
+            out = jax.eval_shape(lambda w, x: (x @ w).T,
+                                 _struct((8, 5)), _struct((4, 8)))
+            return _expect(out, (4, 5), "float32", "broken_head")
+
+        def broken_config():
+            from repro.models.detector import DetectorConfig
+            DetectorConfig(stage_channels=(60,), blocks_per_stage=(12,))
+            return None
+
+        def broken_dtype():
+            out = jax.eval_shape(lambda x: x.astype(jnp.bfloat16),
+                                 _struct((2, 3)))
+            return _expect(out, (2, 3), "float32", "dtype_drift")
+
+        monkeypatch.setattr(
+            contracts_mod, "shape_contracts",
+            lambda: [ShapeContract("broken_head", "fixture.py",
+                                   broken_transpose, "yolo-irc"),
+                     ShapeContract("broken_cfg", "fixture.py",
+                                   broken_config, "yolo-irc"),
+                     ShapeContract("dtype_drift", "fixture.py",
+                                   broken_dtype, "yolo-irc")])
+        got = sorted(rules(contracts_mod.run_contract_pass()))
+        assert got == ["SHP001", "SHP002", "SHP002"]
+
+    def test_every_arch_has_explicit_status(self):
+        from repro.configs.registry import ARCH_STATUS, list_archs
+        for arch in list_archs():
+            assert ARCH_STATUS.get(arch) in ("live", "legacy"), arch
+        assert ARCH_STATUS["yolo-irc"] == "live"
+
+    def test_missing_status_is_flagged(self, monkeypatch):
+        import repro.configs.registry as cfg_registry
+        from repro.analysis.contracts import run_contract_pass
+        trimmed = {k: v for k, v in cfg_registry.ARCH_STATUS.items()
+                   if k != "hymba-1.5b"}
+        monkeypatch.setattr(cfg_registry, "ARCH_STATUS", trimmed)
+        out = run_contract_pass()
+        assert "SHP004" in rules(out)
+        assert any("hymba-1.5b" in f.message for f in out)
+
+
+# --------------------------------------------- runtime guards the passes pin
+
+class TestRuntimeGuards:
+    def test_detector_lattice_guard(self):
+        from repro.models.detector import DetectorConfig
+        with pytest.raises(ValueError, match="s\\*10\\+b"):
+            DetectorConfig(stage_channels=(60, 120),
+                           blocks_per_stage=(1, 10))
+
+    def test_repo_src_is_clean(self):
+        """The committed baseline is EMPTY: the whole tree must pass the
+        AST passes with zero findings (the contract pass is pinned by
+        test_repo_contracts_all_pass without re-tracing here)."""
+        from repro.analysis.runner import run_all
+        findings, _ = run_all(passes=("keys", "trace"))
+        assert findings == [], "\n".join(f.format() for f in findings)
+
+    def test_committed_baseline_empty_for_critical_subtrees(self):
+        from repro.analysis.runner import DEFAULT_BASELINE
+        bl = load_baseline(DEFAULT_BASELINE)
+        assert assert_clean_subtrees(bl) == []

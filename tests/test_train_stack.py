@@ -176,3 +176,21 @@ class TestServeEngine:
         a = eng.generate([[1, 2, 3]], max_new_tokens=5)[0].tokens
         b = eng.generate([[1, 2, 3]], max_new_tokens=5)[0].tokens
         assert a == b
+
+    def test_sampling_independent_of_earlier_waves(self):
+        """Regression (repro.analysis KEY004): sampling keys were a split
+        chain through `self.key`, so a request's draws depended on how many
+        tokens EARLIER waves generated.  Keys are now fold_in(root, wave,
+        step): wave 1's draws must not change when wave 0 generates a
+        different number of tokens."""
+        cfg = get_config("phi3-medium-14b", "smoke")
+        lm = LM(cfg)
+        params = lm.init(jax.random.PRNGKey(0))
+
+        def second_wave_tokens(first_wave_len: int):
+            eng = ServeEngine(lm, params, batch_slots=1, max_len=32,
+                              temperature=1.0, seed=7)
+            eng.generate([[1, 2]], max_new_tokens=first_wave_len)
+            return eng.generate([[3, 4, 5]], max_new_tokens=6)[0].tokens
+
+        assert second_wave_tokens(2) == second_wave_tokens(9)
