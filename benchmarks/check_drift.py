@@ -62,6 +62,22 @@ def _metrics(record: dict) -> dict:
     det = record.get("detector", {})
     if "speedup_vs_loop" in det:
         out["detector_engine_speedup_vs_loop"] = det["speedup_vs_loop"]
+    if "pipeline_speedup_vs_serial" in det:
+        # double-buffered chunk stream vs the serial loop, same run — loses
+        # its edge if sampling falls out of the fused chunk program or the
+        # next-chunk dispatch stops overlapping the host-side mAP matching
+        out["detector_pipeline_speedup_vs_serial"] = (
+            det["pipeline_speedup_vs_serial"])
+    if "pipeline_overlap" in det:
+        # fraction of pipelined wall NOT blocked on device (0..1): the
+        # realized host/device overlap, a machine characteristic that
+        # collapses if double buffering breaks
+        out["detector_pipeline_overlap"] = det["pipeline_overlap"]
+    if "kernel_routed_ratio" in det:
+        # kernel-FORCED detector throughput relative to the same run's
+        # pipelined jnp path — tracks the Pallas-routed path's own cost
+        # (interpret-mode simulator on CPU) without gating absolute speed
+        out["detector_kernel_routed_ratio"] = det["kernel_routed_ratio"]
     step_us = record.get("qat", {}).get("step_us", {})
     if "1" in step_us and "4" in step_us:
         # chips=4 step cost relative to the single-draw step: the ensemble
@@ -81,8 +97,7 @@ def main() -> None:
 
     # fresh run (rewrites BENCH_mc.json in the workspace — baseline captured
     # above; CI never commits the rewrite)
-    for bench in (mc_bench.mc_engine_bench, mc_bench.detector_mc_bench,
-                  mc_bench.qat_step_bench):
+    for bench in mc_bench.ALL:
         for name, us, derived in bench():
             print(f"{name},{us:.1f},{derived}", flush=True)
     mc_bench.finalize_obs(mode="check_drift")

@@ -150,16 +150,47 @@ def _merge_bench_json(record: dict, section: str = "") -> None:
 
 
 # detector bench shapes: smoke geometry, small eval batch — the whole-network
-# forward is ~100x the single-layer MVM, so fewer chips suffice to time it
+# forward is ~100x the single-layer MVM, so fewer chips suffice to time it.
+# DET_CHUNK < DET_CHIPS so the chunk stream has steady-state laps and the
+# pipelined path has a next chunk to double-buffer.
 DET_CHIPS = 8
 DET_LOOP_CHIPS = 4
 DET_BATCH = 2
+DET_CHUNK = 2
+DET_KERNEL_CHIPS = 2     # interpret-mode kernel chips (wall-clock bounded)
+RSS_REGRESSION_FACTOR = 1.25
+
+
+def _peak_rss_bytes() -> float:
+    import resource
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024.0
 
 
 def detector_mc_bench() -> List[Row]:
-    """Whole-network MC throughput: the `DetectorEnsemble` chunk stream vs
-    the pre-PR baseline — a Python loop of single-chip structural detector
-    evals (`IRCDetector.apply(mode="eval")` per sampled die)."""
+    """Whole-network MC throughput, three ladders on one geometry:
+
+      python loop   one single-chip structural eval per die (pre-PR baseline)
+      serial        chunked `run_mc_detector(pipeline=False)` — eager
+                    ensemble build, blocking forward, then host mAP
+      pipelined     `pipeline=True` — mappings hoisted, sampling fused into
+                    the jitted chunk, chunk k+1 on device during chunk k's
+                    host-side mAP matching
+
+    plus a kernel-FORCED pipelined run (`use_kernel=True`: the Pallas
+    chip-batched kernel on every group matmul — interpret mode on CPU, so
+    this times the simulator, not TPU speed; the committed autotuning table
+    keeps auto-dispatch off it here).
+
+    Every `run_mc_detector` variant shares the module-level jitted chunk
+    programs, which are keyed on the CHUNK shape — the warm-up at a smaller
+    ensemble size (`DET_CHIPS // 2`) compiles the one program that every
+    later size reuses (`pipeline_compile_s_reused` ~ 0 is the evidence).
+
+    Peak RSS is sampled after the serial and pipelined ladders; the
+    double-buffered path holds at most one extra chunk of predictions, so
+    the process high-water mark must not grow by more than
+    ``RSS_REGRESSION_FACTOR`` over the serial run.
+    """
     from repro.configs import yolo_irc
     from repro.data.detection import SyntheticDetectionData
     from repro.models import IRCDetector
@@ -188,32 +219,119 @@ def detector_mc_bench() -> List[Row]:
         times.append(time.perf_counter() - t0)
     cps_loop = 1.0 / sorted(times)[len(times) // 2]
 
-    mc = McConfig(n_chips=DET_CHIPS, chunk_size=DET_CHIPS, cfg=cfg)
-    first = run_mc_detector(key, det, params, b.images, b.boxes, b.classes,
-                            mc=mc, obs=_obs())
-    res = max((run_mc_detector(key, det, params, b.images, b.boxes,
-                               b.classes, mc=mc) for _ in range(2)),
-              key=lambda r: r.chips_per_sec)
+    mc = McConfig(n_chips=DET_CHIPS, chunk_size=DET_CHUNK, cfg=cfg)
+    sweep = lambda **kw: run_mc_detector(key, det, params, b.images, b.boxes,
+                                         b.classes, mc=mc, **kw)
 
+    first = sweep(pipeline=False, obs=_obs())
+    res_serial = max((sweep(pipeline=False) for _ in range(2)),
+                     key=lambda r: r.chips_per_sec)
+    rss_serial = _peak_rss_bytes()
+
+    # warm the fused chunk program at half the ensemble size: the jit cache
+    # keys on the CHUNK shape, so the DET_CHIPS runs below reuse it
+    warm = run_mc_detector(key, det, params, b.images, b.boxes, b.classes,
+                           mc=McConfig(n_chips=DET_CHIPS // 2,
+                                       chunk_size=DET_CHUNK, cfg=cfg))
+    first_pipe = sweep(pipeline=True)
+    res_pipe = max((sweep(pipeline=True) for _ in range(2)),
+                   key=lambda r: r.chips_per_sec)
+    rss_pipe = _peak_rss_bytes()
+    assert rss_pipe <= rss_serial * RSS_REGRESSION_FACTOR, (
+        f"pipelined sweep grew peak RSS {rss_pipe / rss_serial:.2f}x over "
+        f"the serial run (budget {RSS_REGRESSION_FACTOR}x)")
+
+    import numpy as np
+    assert np.array_equal(res_serial.per_chip["map50"],
+                          res_pipe.per_chip["map50"]), (
+        "pipelined sweep diverged from the serial path")
+
+    # kernel FORCED onto every group matmul (interpret mode on CPU)
+    mck = McConfig(n_chips=DET_KERNEL_CHIPS, chunk_size=DET_KERNEL_CHIPS,
+                   cfg=cfg)
+    run_mc_detector(key, det, params, b.images, b.boxes, b.classes, mc=mck,
+                    use_kernel=True)
+    res_kern = run_mc_detector(key, det, params, b.images, b.boxes,
+                               b.classes, mc=mck, use_kernel=True)
+
+    overlap = lambda r: 1.0 - r.device_s / max(r.wall_s, 1e-9)
     record = {"n_chips": DET_CHIPS, "batch": DET_BATCH,
+              "chunk_size": DET_CHUNK,
               "img_hw": list(cfg_det.img_hw),
               "loop_chips_per_sec": cps_loop,
-              "engine_chips_per_sec": res.chips_per_sec,
+              "engine_chips_per_sec": res_pipe.chips_per_sec,
               "engine_compile_s": first.compile_s,
-              "engine_wall_s": res.wall_s,
-              "speedup_vs_loop": res.chips_per_sec / cps_loop,
-              "map50_mean": res.metrics["map50"]["mean"],
-              "map50_std": res.metrics["map50"]["std"]}
-    _obs().save_array("per_chip_map50_bench", res.per_chip["map50"])
+              "engine_wall_s": res_pipe.wall_s,
+              "speedup_vs_loop": res_pipe.chips_per_sec / cps_loop,
+              "serial_chips_per_sec": res_serial.chips_per_sec,
+              "pipeline_chips_per_sec": res_pipe.chips_per_sec,
+              "pipeline_speedup_vs_serial": (res_pipe.chips_per_sec
+                                             / res_serial.chips_per_sec),
+              "serial_overlap": overlap(res_serial),
+              "pipeline_overlap": overlap(res_pipe),
+              "pipeline_device_s": res_pipe.device_s,
+              "pipeline_host_s": res_pipe.host_s,
+              "serial_device_s": res_serial.device_s,
+              "serial_host_s": res_serial.host_s,
+              "pipeline_compile_s_warm": warm.compile_s,
+              "pipeline_compile_s_reused": first_pipe.compile_s,
+              "kernel_routed_chips_per_sec": res_kern.chips_per_sec,
+              "kernel_routed_chips": DET_KERNEL_CHIPS,
+              "kernel_routed_ratio": (res_kern.chips_per_sec
+                                      / res_pipe.chips_per_sec),
+              "peak_rss_serial_mb": rss_serial / 2**20,
+              "peak_rss_pipeline_mb": rss_pipe / 2**20,
+              "map50_mean": res_pipe.metrics["map50"]["mean"],
+              "map50_std": res_pipe.metrics["map50"]["std"]}
+    _obs().save_array("per_chip_map50_bench", res_pipe.per_chip["map50"])
     _merge_bench_json(record, section="detector")
     hw = f"{cfg_det.img_hw[0]}x{cfg_det.img_hw[1]}"
     return [
         (f"mc_det_loop_{DET_LOOP_CHIPS}chips_{hw}", 1e6 / cps_loop,
          "per_chip;python_loop_single_chip_eval"),
-        (f"mc_det_engine_{DET_CHIPS}chips_{hw}", 1e6 / res.chips_per_sec,
-         f"per_chip;speedup={record['speedup_vs_loop']:.1f}x;"
+        (f"mc_det_serial_{DET_CHIPS}chips_{hw}",
+         1e6 / res_serial.chips_per_sec,
+         f"per_chip;overlap={record['serial_overlap']:.2f}"),
+        (f"mc_det_pipeline_{DET_CHIPS}chips_{hw}",
+         1e6 / res_pipe.chips_per_sec,
+         f"per_chip;speedup_vs_serial="
+         f"{record['pipeline_speedup_vs_serial']:.2f}x;"
+         f"overlap={record['pipeline_overlap']:.2f};"
          f"map50={record['map50_mean']:.3f}±{record['map50_std']:.3f}"),
+        (f"mc_det_kernel_{DET_KERNEL_CHIPS}chips_{hw}(interp)",
+         1e6 / res_kern.chips_per_sec,
+         "per_chip;use_kernel=True;pallas_interpret"),
     ]
+
+
+def autotune_roofline_bench() -> List[Row]:
+    """Block-shape sweep of `irc_mvm_chips` on the engine-bench geometry,
+    recorded as roofline rows (achieved GFLOP/s per candidate vs the
+    reference path).  On CPU the kernel runs in interpret mode — the sweep
+    characterizes the simulator and justifies the committed
+    `tuning.json` use_kernel=false entries; on TPU the same rows become the
+    real roofline.  A reduced candidate set keeps the interpret-mode wall
+    bounded; the full sweep is `python -m repro.kernels.autotune --write`.
+    """
+    from repro.kernels import autotune
+
+    C, M, N, K = 8, B, N_OUT, FAN_IN + 32     # the mc_engine_bench problem
+    record_, roof = autotune.autotune_problem(
+        C, M, N, K, candidates=((8, 128, 256), (32, 128, 128)))
+    committed = autotune.lookup(C, M, N, K) or {}
+    _merge_bench_json({"problem": f"c{C}_m{M}_n{N}_k{K}",
+                       "backend": jax.default_backend(),
+                       "rows": roof,
+                       "fresh_winner": record_,
+                       "committed": committed},
+                      section="autotune_roofline")
+    rows: List[Row] = []
+    for r in roof:
+        tag = ("ref" if r["impl"] == "ref"
+               else f"bm{r['bm']}_bn{r['bn']}_bk{r['bk']}")
+        rows.append((f"irc_mvm_chips_tune_{tag}_c{C}_{M}x{K}x{N}",
+                     r["us"], f"per_call;gflops={r['gflops']:.2f}"))
+    return rows
 
 
 # ensemble-QAT step timing: smoke geometry, small batch — the chips axis is
@@ -276,4 +394,5 @@ def qat_step_bench() -> List[Row]:
     return rows
 
 
-ALL = [mc_engine_bench, detector_mc_bench, qat_step_bench]
+ALL = [mc_engine_bench, detector_mc_bench, qat_step_bench,
+       autotune_roofline_bench]

@@ -36,6 +36,10 @@ JIT_ENTRY_POINTS: Dict[str, Set[str]] = {
     # crossbar forward is the body every jitted MC path inlines
     "src/repro/core/crossbar.py": {"crossbar_apply"},
     "src/repro/core/nonideal.py": {"resolve_sa", "sensed_diff"},
+    # consulted at TRACE time by IRCDetector._gconv_ensemble's kernel
+    # dispatch (static tuning-table lookups on concrete shapes) — keep the
+    # hygiene checks on them even though they never see a tracer
+    "src/repro/kernels/autotune.py": {"kernel_wins", "best_blocks", "lookup"},
 }
 
 
@@ -95,7 +99,8 @@ def _contract_det_forward(scheme: str, mode: str) -> Optional[str]:
                    f"detector.apply[{mode},{scheme}]")
 
 
-def _contract_det_ensemble(n_chips: int) -> Optional[str]:
+def _contract_det_ensemble(n_chips: int,
+                           use_kernel: Optional[bool] = None) -> Optional[str]:
     import jax
     from repro.core import NonidealConfig
     from repro.mc.detector_mc import build_detector_ensemble
@@ -107,11 +112,34 @@ def _contract_det_ensemble(n_chips: int) -> Optional[str]:
         ens = build_detector_ensemble(k, det, p, n_chips,
                                       cfg=NonidealConfig.all())
         return det.apply(p, x, mode="ensemble", ensemble=ens,
-                         cfg_ni=NonidealConfig.all())
+                         cfg_ni=NonidealConfig.all(), use_kernel=use_kernel)
     out = jax.eval_shape(fwd, params, images, _struct((2,), "uint32"))
     gh, gw, ho = _det_head(det)
+    tag = ",kernel" if use_kernel else ""
     return _expect(out, (n_chips, B, gh, gw, ho), "float32",
-                   f"detector.apply[ensemble x{n_chips}]")
+                   f"detector.apply[ensemble x{n_chips}{tag}]")
+
+
+def _contract_pipelined_chunk(n_chips: int) -> Optional[str]:
+    """The pipelined sweep's fused chunk program: hoisted planes in, sampled
+    ensemble + whole-network forward out, all under one trace."""
+    import jax
+    from repro.core import NonidealConfig
+    from repro.mc.detector_mc import detector_planes, _sampled_chunk_forward
+    det, params = _det_and_params("ternary")
+    B = 2
+
+    def fwd(p, x, k, ids):
+        planes, meta = detector_planes(det, p)
+        return _sampled_chunk_forward(
+            p, x, k, ids, planes, det_cfg=det.cfg, spec=det.spec,
+            cfg_ni=NonidealConfig.all(), sa_extra=0.0, meta=meta)
+    out = jax.eval_shape(fwd, params, _struct((B, *det.cfg.img_hw, 3)),
+                         _struct((2,), "uint32"),
+                         _struct((n_chips,), "uint32"))
+    gh, gw, ho = _det_head(det)
+    return _expect(out, (n_chips, B, gh, gw, ho), "float32",
+                   f"_sampled_chunk_forward[x{n_chips}]")
 
 
 def _contract_qat_step(train_chips: int) -> Optional[str]:
@@ -145,7 +173,8 @@ def _contract_qat_step(train_chips: int) -> Optional[str]:
     return _expect(loss, (), "float32", f"qat_step[chips={train_chips}] loss")
 
 
-def _contract_ensemble_apply(kernel: bool) -> Optional[str]:
+def _contract_ensemble_apply(kernel: bool,
+                             per_chip_x: bool = False) -> Optional[str]:
     import jax
     from repro.core import NonidealConfig
     from repro.core.mapping import ternary_planes
@@ -153,18 +182,51 @@ def _contract_ensemble_apply(kernel: bool) -> Optional[str]:
     from repro.mc.ensemble import sample_ensemble
     n_chips, batch, fan_in, n_out, bias_rows = 3, 4, 60, 20, 16
     cfg = NonidealConfig.all()
+    x_shape = ((n_chips, batch, fan_in) if per_chip_x
+               else (batch, fan_in))
 
     def fwd(k, w, x):
         mapped = ternary_planes(w, bias_rows=bias_rows)
         ens = sample_ensemble(k, mapped, n_chips, cfg=cfg)
         if kernel:
-            return mc_engine.ensemble_apply_kernel(ens, x, cfg=cfg)
-        return mc_engine.ensemble_apply(ens, x, cfg=cfg)
+            return mc_engine.ensemble_apply_kernel(ens, x, cfg=cfg,
+                                                   per_chip_x=per_chip_x)
+        return mc_engine.ensemble_apply(ens, x, cfg=cfg,
+                                        per_chip_x=per_chip_x)
+    out = jax.eval_shape(fwd, _struct((2,), "uint32"),
+                         _struct((fan_in, n_out)), _struct(x_shape))
+    name = "ensemble_apply_kernel" if kernel else "ensemble_apply"
+    if per_chip_x:
+        name += "[per_chip_x]"
+    return _expect(out, (n_chips, batch, n_out), "float32", name)
+
+
+def _contract_ensemble_apply_donated() -> Optional[str]:
+    """The chunk loop's buffer-donating entry (`run_mc`'s non-fused path):
+    same output contract as `ensemble_apply`, ep/en/sa_keys donated."""
+    import jax
+    from repro.core import NonidealConfig
+    from repro.core.macro import DEFAULT_MACRO
+    from repro.core.mapping import ternary_planes
+    from repro.mc.engine import _ensemble_apply_donated
+    from repro.mc.ensemble import sample_ensemble
+    n_chips, batch, fan_in, n_out, bias_rows = 3, 4, 60, 20, 16
+    cfg = NonidealConfig.all()
+
+    def fwd(k, w, x):
+        mapped = ternary_planes(w, bias_rows=bias_rows)
+        ens = sample_ensemble(k, mapped, n_chips, cfg=cfg)
+        return _ensemble_apply_donated(
+            ens.ep, ens.en, ens.sa_keys, ens.chip_ids, ens.gp, ens.gn,
+            ens.bias_units, x, scheme=ens.scheme, fan_in=ens.fan_in,
+            cfg=cfg, spec=DEFAULT_MACRO,
+            accumulation="single_shot", partial_rows=256,
+            sa_extra_units=0.0, backend="jnp")
     out = jax.eval_shape(fwd, _struct((2,), "uint32"),
                          _struct((fan_in, n_out)),
                          _struct((batch, fan_in)))
-    name = "ensemble_apply_kernel" if kernel else "ensemble_apply"
-    return _expect(out, (n_chips, batch, n_out), "float32", name)
+    return _expect(out, (n_chips, batch, n_out), "float32",
+                   "_ensemble_apply_donated")
 
 
 def _contract_fused_chunk_metrics() -> Optional[str]:
@@ -227,6 +289,12 @@ def shape_contracts() -> List[ShapeContract]:
                       lambda: _contract_det_forward("binary", "eval"), det),
         ShapeContract("detector.apply[ensemble x4]", det_file,
                       lambda: _contract_det_ensemble(4), det),
+        ShapeContract("detector.apply[ensemble x4,kernel]", det_file,
+                      lambda: _contract_det_ensemble(4, use_kernel=True),
+                      det),
+        ShapeContract("_sampled_chunk_forward[x3]",
+                      "src/repro/mc/detector_mc.py",
+                      lambda: _contract_pipelined_chunk(3), det),
         ShapeContract("qat_step[chips=1]", steps_file,
                       lambda: _contract_qat_step(1), det),
         ShapeContract("qat_step[chips=4]", steps_file,
@@ -235,6 +303,11 @@ def shape_contracts() -> List[ShapeContract]:
                       lambda: _contract_ensemble_apply(False), det),
         ShapeContract("ensemble_apply_kernel", mc_file,
                       lambda: _contract_ensemble_apply(True), det),
+        ShapeContract("ensemble_apply_kernel[per_chip_x]", mc_file,
+                      lambda: _contract_ensemble_apply(True,
+                                                       per_chip_x=True), det),
+        ShapeContract("_ensemble_apply_donated", mc_file,
+                      lambda: _contract_ensemble_apply_donated(), det),
         ShapeContract("_fused_chunk_metrics", mc_file,
                       lambda: _contract_fused_chunk_metrics(), det),
     ]

@@ -143,13 +143,16 @@ def _irc_mvm_kernel(x_ref, ep_ref, en_ref, gp_ref, gn_ref, eps_ref, rnd_ref,
 def _irc_mvm_chips_kernel(x_ref, ep_ref, en_ref, gp_ref, gn_ref, eps_ref,
                           rnd_ref, out_ref, blocks_p, blocks_n, p_pos, p_neg,
                           *, params: IrcEpilogueParams, nk: int, bk: int,
-                          shared_counts: bool):
+                          shared_counts: bool, per_chip_x: bool):
     """Chip-batched variant: grid (chips, B/bm, N/bn, R/bk); the plane /
     periphery refs carry a leading length-1 chip block.  The word-line tile
-    is SHARED by every chip (one ensemble evaluates one input batch), so the
-    extra grid dimension reuses the x block across the chip walk; with
-    `shared_counts` the LRS placement planes are chip-independent too and
-    arrive as plain 2-D tiles (one HBM copy serves every chip)."""
+    is SHARED by every chip by default (one ensemble evaluates one input
+    batch), so the extra grid dimension reuses the x block across the chip
+    walk; with `per_chip_x` the word-line tile carries its own length-1 chip
+    block instead — how network-level MC feeds chip-diverged activations
+    from one IRC layer into the next.  With `shared_counts` the LRS
+    placement planes are chip-independent too and arrive as plain 2-D tiles
+    (one HBM copy serves every chip)."""
     k = pl.program_id(3)
     blk = params.ir_block
     nbk = bk // blk
@@ -163,7 +166,8 @@ def _irc_mvm_chips_kernel(x_ref, ep_ref, en_ref, gp_ref, gn_ref, eps_ref,
 
     gp = gp_ref[...] if shared_counts else gp_ref[0]
     gn = gn_ref[...] if shared_counts else gn_ref[0]
-    _accum_step(x_ref[...].astype(jnp.float32),
+    x = x_ref[0] if per_chip_x else x_ref[...]
+    _accum_step(x.astype(jnp.float32),
                 ep_ref[0].astype(jnp.float32),
                 en_ref[0].astype(jnp.float32),
                 gp.astype(jnp.float32),
@@ -229,16 +233,18 @@ def irc_mvm_chips_pallas(x: jax.Array, ep: jax.Array, en: jax.Array,
                          interpret: bool = False) -> jax.Array:
     """Chip-batched raw wrapper: one launch services a whole chip ensemble.
 
-    x [B, R] is shared; ep/en [C, R, N] and eps/rnd [C, B, N] carry the
-    chips axis; gp/gn are either [C, R, N] (per-chip placement, e.g. after
-    per-die bias calibration) or [R, N] (shared placement — one HBM copy
-    serves every chip); output is [C, B, N].  The chips grid dimension is
-    outermost and fully parallel — on TPU the C x (B/bm) x (N/bn) tiles
-    schedule like one big MVM instead of C kernel launches.  Shapes must be
-    tile-aligned (use `repro.kernels.ops.irc_mvm_chips` for the padded
-    entry point).
+    x [B, R] is shared — or [C, B, R] with a per-chip word-line stream
+    (chip-diverged activations downstream of the first IRC layer); ep/en
+    [C, R, N] and eps/rnd [C, B, N] carry the chips axis; gp/gn are either
+    [C, R, N] (per-chip placement, e.g. after per-die bias calibration) or
+    [R, N] (shared placement — one HBM copy serves every chip); output is
+    [C, B, N].  The chips grid dimension is outermost and fully parallel —
+    on TPU the C x (B/bm) x (N/bn) tiles schedule like one big MVM instead
+    of C kernel launches.  Shapes must be tile-aligned (use
+    `repro.kernels.ops.irc_mvm_chips` for the padded entry point).
     """
-    B, R = x.shape
+    per_chip_x = x.ndim == 3
+    B, R = x.shape[-2:]
     C, _, N = ep.shape
     shared_counts = gp.ndim == 2
     assert R % bk == 0 and bk % params.ir_block == 0, (R, bk, params.ir_block)
@@ -248,16 +254,20 @@ def irc_mvm_chips_pallas(x: jax.Array, ep: jax.Array, en: jax.Array,
 
     grid = (C, B // bm, N // bn, nk)
     kernel = functools.partial(_irc_mvm_chips_kernel, params=params,
-                               nk=nk, bk=bk, shared_counts=shared_counts)
+                               nk=nk, bk=bk, shared_counts=shared_counts,
+                               per_chip_x=per_chip_x)
     plane = pl.BlockSpec((1, bk, bn), lambda c, i, j, k: (c, k, j))
     count = (pl.BlockSpec((bk, bn), lambda c, i, j, k: (k, j))
              if shared_counts else plane)
     peri = pl.BlockSpec((1, bm, bn), lambda c, i, j, k: (c, i, j))
+    x_spec = (pl.BlockSpec((1, bm, bk), lambda c, i, j, k: (c, i, k))
+              if per_chip_x
+              else pl.BlockSpec((bm, bk), lambda c, i, j, k: (i, k)))
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda c, i, j, k: (i, k)),   # x (shared)
+            x_spec,                                              # x
             plane, plane, count, count,                          # ep en gp gn
             peri, peri,                                          # eps_sa, rnd
         ],

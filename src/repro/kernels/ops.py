@@ -69,18 +69,19 @@ def irc_mvm_chips(x: jax.Array, ep: jax.Array, en: jax.Array,
                   params: IrcEpilogueParams,
                   bm: int = 8, bn: int = 128, bk: int = 256,
                   interpret: Optional[bool] = None) -> jax.Array:
-    """Chip-batched fused IRC MVM: x [B,R] shared, effective planes [C,R,N],
-    placement planes [C,R,N] or shared [R,N], periphery noise [C,B,N]
-    -> [C,B,N] in ONE kernel launch (the `repro.mc` hot path).
+    """Chip-batched fused IRC MVM: x [B,R] shared (or [C,B,R] per-chip
+    word-line stream), effective planes [C,R,N], placement planes [C,R,N] or
+    shared [R,N], periphery noise [C,B,N] -> [C,B,N] in ONE kernel launch
+    (the `repro.mc` hot path).
 
     Accepts arbitrary (C, B, R, N); pads B/R/N to tile multiples (padded rows
     are zero-conductance, padded batch/cols are sliced off; the chips axis
     needs no padding — it maps 1:1 onto the outermost grid dimension).
     """
-    B, R = x.shape
+    B, R = x.shape[-2:]
     C, _, N = ep.shape
     interp = _on_cpu() if interpret is None else interpret
-    x = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    x = _pad_to(_pad_to(x, x.ndim - 2, bm), x.ndim - 1, bk)
     pad_plane = lambda p: _pad_to(_pad_to(p, p.ndim - 2, bk), p.ndim - 1, bn)
     ep, en, gp, gn = map(pad_plane, (ep, en, gp, gn))
     pad_bn = lambda p: _pad_to(_pad_to(p, 1, bm), 2, bn)

@@ -127,16 +127,18 @@ def irc_mvm_chips_ref(x: jax.Array, ep: jax.Array, en: jax.Array,
                       eps_sa: jax.Array, rnd_bits: jax.Array,
                       params: IrcEpilogueParams) -> jax.Array:
     """Oracle for the chip-batched kernel: vmap of `irc_mvm_ref` over the
-    leading chips axis of the planes / periphery noise, x shared.
+    leading chips axis of the planes / periphery noise.
 
-    x [B, R]; ep/en [C, R, N]; gp/gn [C, R, N] or shared [R, N];
+    x [B, R] (shared word lines) or [C, B, R] (per-chip word-line stream);
+    ep/en [C, R, N]; gp/gn [C, R, N] or shared [R, N];
     eps/rnd [C, B, N] -> [C, B, N]."""
     count_axis = None if gp.ndim == 2 else 0
+    x_axis = None if x.ndim == 2 else 0
     return jax.vmap(
-        lambda ep_c, en_c, gp_c, gn_c, eps_c, rnd_c: irc_mvm_ref(
-            x, ep_c, en_c, gp_c, gn_c, eps_c, rnd_c, params),
-        in_axes=(0, 0, count_axis, count_axis, 0, 0)
-    )(ep, en, gp, gn, eps_sa, rnd_bits)
+        lambda x_c, ep_c, en_c, gp_c, gn_c, eps_c, rnd_c: irc_mvm_ref(
+            x_c, ep_c, en_c, gp_c, gn_c, eps_c, rnd_c, params),
+        in_axes=(x_axis, 0, 0, count_axis, count_axis, 0, 0)
+    )(x, ep, en, gp, gn, eps_sa, rnd_bits)
 
 
 def ternary_matmul_ref(x: jax.Array, w_t: jax.Array) -> jax.Array:

@@ -40,6 +40,11 @@ summary only.
   PYTHONPATH=src python -m repro.launch.mc --network detector --chips 16 \
       --det-steps 100 --ablation table2 --trace
 
+  # detector sweep with the Pallas chip-batched kernel forced onto every
+  # group matmul (auto consults src/repro/kernels/tuning.json instead)
+  PYTHONPATH=src python -m repro.launch.mc --network detector --chips 4 \
+      --chunk 2 --det-backend kernel
+
   # ensemble-aware QAT: single-draw vs 4-chip-population training, scored
   # side by side with whole-network population mAP
   PYTHONPATH=src python -m repro.launch.mc --network detector --chips 16 \
@@ -183,10 +188,15 @@ def run_detector(args) -> None:
     mc = McConfig(n_chips=args.chips, chunk_size=args.chunk)
     key = jax.random.PRNGKey(args.seed)
     columns = _ablation_columns(args, TABLE2_ABLATION)
+    # auto defers to the committed kernels/tuning.json; kernel forces the
+    # Pallas chip-batched path (interpret mode on CPU)
+    use_kernel = {"auto": None, "jnp": False, "kernel": True}[args.det_backend]
 
     print(f"# detector {args.det_scheme} {cfg.img_hw[0]}x{cfg.img_hw[1]} "
           f"batch={args.det_batch} chips={args.chips} "
-          f"qat_steps={args.det_steps} train_chips={args.train_chips}")
+          f"qat_steps={args.det_steps} train_chips={args.train_chips} "
+          f"backend={args.det_backend} "
+          f"pipeline={not args.no_pipeline}")
     print(f"{'checkpoint':10s} {'config':14s} {'map50 mean±std':>16s} "
           f"{'drop':>7s} {'q05':>7s} {'q50':>7s} {'q95':>7s} "
           f"{'chips':>5s} {'chips/s':>8s} {'compile_s':>9s}")
@@ -202,7 +212,8 @@ def run_detector(args) -> None:
             results[name] = run_mc_detector(
                 key, det, params, ev.images, ev.boxes, ev.classes,
                 mc=dataclasses.replace(mc, cfg=cfg_ni), obs=obs,
-                stderr_target=args.stderr_target)
+                stderr_target=args.stderr_target,
+                pipeline=not args.no_pipeline, use_kernel=use_kernel)
         ideal_mean = results["ideal"].metrics["map50"]["mean"]
         report["results"][ck] = {}
         for name, res in results.items():
@@ -227,6 +238,7 @@ def run_detector(args) -> None:
                 "metrics": res.metrics, "wall_s": res.wall_s,
                 "compile_s": res.compile_s,
                 "chips_per_sec": res.chips_per_sec,
+                "device_s": res.device_s, "host_s": res.host_s,
                 "per_chip_map50": res.per_chip["map50"].tolist()}
     _write_csv(args, obs, csv_lines)
     _write_report(args, obs, report)
@@ -313,6 +325,15 @@ def main() -> None:
                          "QAT side by side (needs --det-steps)")
     ap.add_argument("--resample-every", type=int, default=1,
                     help="QAT steps between chip-population resamples")
+    ap.add_argument("--det-backend", default="auto",
+                    choices=["auto", "jnp", "kernel"],
+                    help="detector crossbar matmul routing: auto consults "
+                         "the committed kernels/tuning.json, jnp forces the "
+                         "reference ensemble path, kernel forces the Pallas "
+                         "chip-batched kernel (interpret mode on CPU)")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="serial chunk loop (eager ensemble build + blocking "
+                         "forward) instead of the double-buffered pipeline")
     ap.add_argument("--chips", type=int, default=64)
     ap.add_argument("--chunk", type=int, default=32)
     ap.add_argument("--batch", type=int, default=256)
@@ -364,7 +385,7 @@ def main() -> None:
         run_detector(args)
         return
 
-    det_only = ("train_chips", "resample_every")
+    det_only = ("train_chips", "resample_every", "det_backend", "no_pipeline")
     misused = [f"--{n.replace('_', '-')}" for n in det_only
                if getattr(args, n) != ap.get_default(n)]
     if misused:

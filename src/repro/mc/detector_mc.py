@@ -128,10 +128,13 @@ def build_train_ensemble(key: jax.Array, det, params, n_chips: int, *,
 
 
 @functools.partial(jax.jit, static_argnames=("det_cfg", "spec", "cfg_ni",
-                                             "sa_extra"))
+                                             "sa_extra", "use_kernel",
+                                             "kernel_impl"))
 def _ensemble_forward(params, images, ens: DetectorEnsemble, *, det_cfg,
                       spec: MacroSpec, cfg_ni: ni.NonidealConfig,
-                      sa_extra: float) -> jax.Array:
+                      sa_extra: float,
+                      use_kernel: Optional[bool] = None,
+                      kernel_impl: str = "pallas") -> jax.Array:
     """Module-level jitted ensemble forward: the compile cache is keyed on
     the (hashable) detector config, so repeated `run_mc_detector` calls —
     chunk streams, ablation columns, benchmark reruns — reuse one program
@@ -139,7 +142,74 @@ def _ensemble_forward(params, images, ens: DetectorEnsemble, *, det_cfg,
     from repro.models.detector import IRCDetector
     det = IRCDetector(det_cfg, spec)
     return det.apply(params, images, mode="ensemble", ensemble=ens,
-                     cfg_ni=cfg_ni, sa_extra=sa_extra)
+                     cfg_ni=cfg_ni, sa_extra=sa_extra,
+                     use_kernel=use_kernel, kernel_impl=kernel_impl)
+
+
+def detector_planes(det, params):
+    """Hoist the per-layer `group_mappings` out of the chunk loop.
+
+    `build_detector_ensemble` re-derives every group's mapped planes from
+    the current params on every call — a per-chunk host cost (quantization,
+    plane assembly) that is INVARIANT across chunks of one sweep.  This
+    returns the same information split for the jitted chunk program:
+
+      planes  nested tuple pytree of (g_pos, g_neg) arrays per layer/group
+              (traced jit operands — donation-safe, no Python objects);
+      meta    hashable static twin: per layer (name, layer_id = s*10+b,
+              per-group (bias_rows, scheme, fan_in)).
+    """
+    dcfg = det.cfg
+    planes, meta = [], []
+    for s, (ch, nb) in enumerate(zip(dcfg.stage_channels,
+                                     dcfg.blocks_per_stage)):
+        c_in = dcfg.stage_channels[max(0, s - 1)] if s else ch
+        for b in range(nb):
+            cin = max(c_in if b == 0 else ch, ch)   # widen-by-repetition
+            name = f"s{s}b{b}"
+            group_maps = det.group_mappings(params[name], cin, ch)
+            planes.append(tuple((m.g_pos, m.g_neg) for m in group_maps))
+            meta.append((name, s * 10 + b,
+                         tuple((m.bias_rows, m.scheme, m.fan_in)
+                               for m in group_maps)))
+    return tuple(planes), tuple(meta)
+
+
+@functools.partial(jax.jit, static_argnames=("det_cfg", "spec", "cfg_ni",
+                                             "sa_extra", "meta",
+                                             "use_kernel", "kernel_impl"))
+def _sampled_chunk_forward(params, images, key, chip_ids, planes, *, det_cfg,
+                           spec: MacroSpec, cfg_ni: ni.NonidealConfig,
+                           sa_extra: float, meta,
+                           use_kernel: Optional[bool] = None,
+                           kernel_impl: str = "pallas") -> jax.Array:
+    """Fused chunk program for the pipelined sweep: sample the chunk's
+    `DetectorEnsemble` IN-TRACE (same `detector_layer_keys` stream and
+    `sample_ensemble_with_keys` ops as the eager builder — the threefry
+    sampling is bitwise deterministic, so the planes, and hence the
+    predictions, are bit-identical to the serial path; pinned by
+    tests/test_detector_mc.py) and run the ensemble forward, all in ONE
+    dispatch.  Folding the sampling into the program removes the serial
+    path's per-chunk eager-dispatch overhead and lets the whole chunk run
+    asynchronously while the host scores the previous one."""
+    from repro.core.mapping import MappedLayer
+    from repro.models.detector import IRCDetector
+    det = IRCDetector(det_cfg, spec)
+    layers: Dict[str, Tuple[ChipEnsemble, ...]] = {}
+    for layer_planes, (name, layer_id, gmeta) in zip(planes, meta):
+        groups = []
+        for g, ((gp, gn), (bias_rows, scheme, fan_in)) in enumerate(
+                zip(layer_planes, gmeta)):
+            mapped = MappedLayer(g_pos=gp, g_neg=gn, bias_rows=bias_rows,
+                                 scheme=scheme, fan_in=fan_in)
+            keys = detector_layer_keys(key, chip_ids, layer_id, g)
+            groups.append(sample_ensemble_with_keys(
+                keys, mapped, chip_ids=chip_ids, cfg=cfg_ni, spec=spec))
+        layers[name] = tuple(groups)
+    ens = DetectorEnsemble(layers=layers, chip_ids=chip_ids)
+    return det.apply(params, images, mode="ensemble", ensemble=ens,
+                     cfg_ni=cfg_ni, sa_extra=sa_extra,
+                     use_kernel=use_kernel, kernel_impl=kernel_impl)
 
 
 def run_mc_detector(key: jax.Array, det, params, images: jax.Array,
@@ -148,7 +218,10 @@ def run_mc_detector(key: jax.Array, det, params, images: jax.Array,
                     mc: McConfig = McConfig(),
                     sa_extra: float = 0.0,
                     obs: Optional[RunLog] = None,
-                    stderr_target: Optional[float] = None) -> McResult:
+                    stderr_target: Optional[float] = None,
+                    pipeline: bool = True,
+                    use_kernel: Optional[bool] = None,
+                    kernel_impl: str = "pallas") -> McResult:
     """Stream a chip population of the WHOLE detector over an eval batch.
 
     Per chunk: build the chunk's `DetectorEnsemble`, run ONE jitted
@@ -156,6 +229,20 @@ def run_mc_detector(key: jax.Array, det, params, images: jax.Array,
     chip's host-side mAP@0.5 into the streaming accumulators.  The metric
     name is "map50"; chunking is statistically invisible (chip `c` is keyed
     by `fold_in(key, c)` regardless of chunk layout).
+
+    `pipeline=True` (default) runs the double-buffered path: the group
+    mappings are hoisted out of the loop (`detector_planes`), each chunk's
+    ensemble sampling is fused into its jitted forward
+    (`_sampled_chunk_forward`), and chunk k+1 is DISPATCHED before chunk k's
+    host-side mAP matching — the device computes the next chunk while the
+    host scores the current one.  Per-chip results are bit-identical to
+    `pipeline=False` (same key stream, same sampled planes, same fold
+    order; pinned by tests) — early stop triggers at the same chunk
+    boundary, discarding at most the one extra in-flight chunk.
+
+    `use_kernel`/`kernel_impl` route the grouped matmuls onto the Pallas
+    chip-batched kernel (see `IRCDetector._gconv_ensemble`; None defers to
+    the committed autotuning table).
 
     `params` should carry calibrated stem-BN running stats
     (`det.calibrate_bn`) — eval-mode normalization uses them.
@@ -172,26 +259,55 @@ def run_mc_detector(key: jax.Array, det, params, images: jax.Array,
     monitor = ConvergenceMonitor(moments, stderr_target=stderr_target,
                                  runlog=obs, phase="mc_detector")
     timer = PhaseTimer("mc_detector_chunks", unit="chips")
+    dev_timer = PhaseTimer("mc_detector_device", unit="chips")
+    host_timer = PhaseTimer("mc_detector_host", unit="chips")
     obs.log_event("mc_start", phase="mc_detector", n_chips=mc.n_chips,
-                  chunk_size=mc.chunk_size, stderr_target=stderr_target)
+                  chunk_size=mc.chunk_size, stderr_target=stderr_target,
+                  pipeline=pipeline)
+
+    chunk_ids = [jnp.arange(lo, min(lo + mc.chunk_size, mc.n_chips),
+                            dtype=jnp.uint32)
+                 for lo in range(0, mc.n_chips, mc.chunk_size)]
+
+    if pipeline:
+        planes, meta = detector_planes(det, params)
+
+        def dispatch(ids):
+            return _sampled_chunk_forward(
+                params, images, key, ids, planes, det_cfg=det.cfg,
+                spec=det.spec, cfg_ni=mc.cfg, sa_extra=sa_extra, meta=meta,
+                use_kernel=use_kernel, kernel_impl=kernel_impl)
+
+        inflight = dispatch(chunk_ids[0]) if chunk_ids else None
 
     n_done = 0
-    for chunk_i, lo in enumerate(range(0, mc.n_chips, mc.chunk_size)):
-        ids = jnp.arange(lo, min(lo + mc.chunk_size, mc.n_chips),
-                         dtype=jnp.uint32)
-        with timer.lap(items=int(ids.shape[0])):
-            ens = build_detector_ensemble(key, det, params, chip_ids=ids,
-                                          cfg=mc.cfg)
-            preds = np.asarray(jax.block_until_ready(_ensemble_forward(
-                params, images, ens, det_cfg=det.cfg, spec=det.spec,
-                cfg_ni=mc.cfg, sa_extra=sa_extra)))
-            vals = jnp.asarray(evaluate_map_per_chip(
-                preds, gt_boxes, gt_classes, det.cfg.n_anchors,
-                det.cfg.n_classes))
-        n_done += int(ids.shape[0])
+    for chunk_i, ids in enumerate(chunk_ids):
+        n_chunk = int(ids.shape[0])
+        with timer.lap(items=n_chunk):
+            if pipeline:
+                with dev_timer.lap(items=n_chunk):
+                    preds_dev = jax.block_until_ready(inflight)
+                if chunk_i + 1 < len(chunk_ids):
+                    # double buffer: next chunk on device DURING host scoring
+                    inflight = dispatch(chunk_ids[chunk_i + 1])
+            else:
+                with dev_timer.lap(items=n_chunk):
+                    ens = build_detector_ensemble(key, det, params,
+                                                  chip_ids=ids, cfg=mc.cfg)
+                    preds_dev = jax.block_until_ready(_ensemble_forward(
+                        params, images, ens, det_cfg=det.cfg, spec=det.spec,
+                        cfg_ni=mc.cfg, sa_extra=sa_extra,
+                        use_kernel=use_kernel, kernel_impl=kernel_impl))
+            with host_timer.lap(items=n_chunk):
+                preds = np.asarray(preds_dev)
+                vals = jnp.asarray(evaluate_map_per_chip(
+                    preds, gt_boxes, gt_classes, det.cfg.n_anchors,
+                    det.cfg.n_classes))
+        n_done += n_chunk
         moments["map50"].update(vals)
         obs.log_event("chunk", phase="mc_detector", chunk=chunk_i,
-                      chip_lo=lo, chips=n_done, wall_s=timer.last_s,
+                      chip_lo=int(ids[0]), chips=n_done, wall_s=timer.last_s,
+                      device_s=dev_timer.last_s, host_s=host_timer.last_s,
                       values={"map50": np.asarray(jnp.ravel(vals))})
         if monitor.after_chunk(chunk_i, n_done):
             obs.log_event("early_stop", chips=n_done, requested=mc.n_chips,
@@ -203,11 +319,13 @@ def run_mc_detector(key: jax.Array, det, params, images: jax.Array,
         metrics={name: m.summary() for name, m in moments.items()},
         per_chip={name: m.per_chip for name, m in moments.items()},
         wall_s=timer.total_s, chips_per_sec=timer.rate(),
-        compile_s=timer.compile_s)
+        compile_s=timer.compile_s,
+        device_s=dev_timer.total_s, host_s=host_timer.total_s)
     obs.log_event("mc_result", phase="mc_detector", chips=n_done,
                   requested=mc.n_chips, wall_s=res.wall_s,
                   compile_s=res.compile_s, chips_per_sec=res.chips_per_sec,
-                  metrics=res.metrics)
+                  device_s=res.device_s, host_s=res.host_s,
+                  pipeline=pipeline, metrics=res.metrics)
     return res
 
 
@@ -218,7 +336,10 @@ def run_ablation_detector(key: jax.Array, det, params, images: jax.Array,
                           = TABLE2_ABLATION,
                           mc: McConfig = McConfig(),
                           obs: Optional[RunLog] = None,
-                          stderr_target: Optional[float] = None
+                          stderr_target: Optional[float] = None,
+                          pipeline: bool = True,
+                          use_kernel: Optional[bool] = None,
+                          kernel_impl: str = "pallas"
                           ) -> Dict[str, McResult]:
     """Table II for the detector: one population mAP sweep per effect
     column, same chip key stream across columns (each effect set resamples
@@ -230,5 +351,6 @@ def run_ablation_detector(key: jax.Array, det, params, images: jax.Array,
         results[name] = run_mc_detector(
             key, det, params, images, gt_boxes, gt_classes,
             mc=dataclasses.replace(mc, cfg=cfg), obs=obs,
-            stderr_target=stderr_target)
+            stderr_target=stderr_target, pipeline=pipeline,
+            use_kernel=use_kernel, kernel_impl=kernel_impl)
     return results

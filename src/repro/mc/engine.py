@@ -106,11 +106,13 @@ def ensemble_apply(ens: ChipEnsemble, x_bits: jax.Array, *,
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "spec", "sa_extra_units",
-                                             "output", "bm", "bn", "bk"))
+                                             "output", "per_chip_x", "impl",
+                                             "bm", "bn", "bk"))
 def ensemble_apply_kernel(ens: ChipEnsemble, x_bits: jax.Array, *,
                           cfg: ni.NonidealConfig,
                           spec: MacroSpec = DEFAULT_MACRO,
                           sa_extra_units: float = 0.0, output: str = "binary",
+                          per_chip_x: bool = False, impl: str = "pallas",
                           bm: int = 8, bn: int = 128, bk: int = 256
                           ) -> jax.Array:
     """Chip-batched Pallas path: ONE kernel launch services all chips.
@@ -119,11 +121,24 @@ def ensemble_apply_kernel(ens: ChipEnsemble, x_bits: jax.Array, *,
     per-read stochastic terms are pre-sampled here from each chip's `sa_keys`
     with the `irc_mvm_from_mapped` key discipline, so chip `c` matches a loop
     of single-chip kernel calls exactly.
+
+    With `per_chip_x`, x_bits carries a leading chips axis ([chips, batch,
+    fan_in]) — chip-diverged activations downstream of the first IRC layer;
+    the kernel walks a per-chip word-line block instead of reusing one
+    shared tile.  `impl` selects the pallas kernel ("pallas", interpret mode
+    on CPU) or its pure-jnp oracle ("ref") — the oracle IS the kernel's
+    bit-exactness contract (tests pin pallas == ref through the whole
+    detector), so routing through it gives kernel-semantics outputs where
+    interpret mode would be too slow.
     """
     from repro.kernels.ops import irc_mvm_chips
-    from repro.kernels.ref import IrcEpilogueParams
+    from repro.kernels.ref import IrcEpilogueParams, irc_mvm_chips_ref
+    if per_chip_x:
+        assert x_bits.ndim == 3 and x_bits.shape[0] == ens.n_chips, (
+            f"per_chip_x needs [chips={ens.n_chips}, batch, fan_in] inputs, "
+            f"got {x_bits.shape}")
     x_ext = _extend(x_bits, ens.lead_rows)
-    B, N = x_ext.shape[0], ens.n_out
+    B, N = x_ext.shape[-2], ens.n_out
 
     def periphery(k_sa):
         k_off, k_rng = jax.random.split(k_sa)
@@ -138,8 +153,41 @@ def ensemble_apply_kernel(ens: ChipEnsemble, x_bits: jax.Array, *,
         spec, sa_extra=sa_extra_units, output=output,
         apply_nonlinearity=cfg.nonlinearity, apply_ir=cfg.ir_drop,
         apply_sa=cfg.sa_variation, apply_range=cfg.sensing_range)
+    if impl == "ref":
+        return irc_mvm_chips_ref(x_ext, ens.ep, ens.en, gp, gn, eps_sa, rnd,
+                                 params)
     return irc_mvm_chips(x_ext, ens.ep, ens.en, gp, gn, eps_sa, rnd, params,
                          bm=bm, bn=bn, bk=bk)
+
+
+@functools.partial(jax.jit, static_argnames=("scheme", "fan_in", "cfg",
+                                             "spec", "accumulation",
+                                             "partial_rows", "sa_extra_units",
+                                             "backend"),
+                   donate_argnums=(0, 1, 2))
+def _ensemble_apply_donated(ep, en, sa_keys, chip_ids, gp, gn, bias_units,
+                            x_bits, *, scheme, fan_in, cfg, spec,
+                            accumulation, partial_rows, sa_extra_units,
+                            backend):
+    """Per-chunk forward with the chunk's THROWAWAY sampled state donated.
+
+    `run_mc` samples fresh ep/en/sa_keys every chunk and never touches them
+    after the forward, so donating them lets XLA reuse those buffers for the
+    chunk's activations instead of allocating a second ensemble-sized block
+    — on accelerators this halves the peak footprint of the streaming loop
+    (CPU accepts the donation too).  The placement planes and word-line bits
+    are NOT donated: `mapped.g_pos` / `x_bits` are shared by every chunk.
+    """
+    ens = ChipEnsemble(ep=ep, en=en, gp=gp, gn=gn, sa_keys=sa_keys,
+                       chip_ids=chip_ids, bias_units=bias_units,
+                       scheme=scheme, fan_in=fan_in)
+    if backend == "kernel":
+        return ensemble_apply_kernel(ens, x_bits, cfg=cfg, spec=spec,
+                                     sa_extra_units=sa_extra_units)
+    return ensemble_apply(ens, x_bits, cfg=cfg, spec=spec,
+                          accumulation=accumulation,
+                          partial_rows=partial_rows,
+                          sa_extra_units=sa_extra_units)
 
 
 # ------------------------------------------------------------------ metrics
@@ -211,6 +259,13 @@ class McResult:
     dominated by compilation and meaningless as a throughput number.
     With `stderr_target` early stop, `n_chips` is the count actually
     evaluated (a prefix of the requested population).
+
+    `device_s`/`host_s` split the loop body: time BLOCKED waiting on device
+    results vs. host-side metric work (mAP matching, numpy transfers).  In a
+    pipelined sweep the next chunk runs on device DURING the host slice, so
+    blocked time collapses; `1 - device_s / wall_s` measures the realized
+    overlap (serial loop ~= host fraction; -> 1.0 as device waits are fully
+    hidden behind host scoring).
     """
     n_chips: int
     metrics: Dict[str, Dict[str, float]]      # name -> {mean,std,qXX,...}
@@ -219,6 +274,8 @@ class McResult:
     chips_per_sec: float
     compile_s: float = 0.0
     bias_units: Optional[np.ndarray] = None   # per-chip calibrated bias
+    device_s: float = 0.0                     # blocked-on-device wall
+    host_s: float = 0.0                       # host-side metric wall
 
     def summary_line(self, metric: str = "bit_agreement") -> str:
         m = self.metrics[metric]
@@ -314,15 +371,15 @@ def run_mc(key: jax.Array, mapped, x_bits: jax.Array, *,
                     bias_chunks.append(np.asarray(ens.bias_units))
                 if mesh is not None:
                     ens = shard_ensemble(ens, mesh)
-                if mc.backend == "kernel":
-                    out = ensemble_apply_kernel(
-                        ens, x_bits, cfg=mc.cfg, spec=spec,
-                        sa_extra_units=mc.sa_extra_units)
-                else:
-                    out = ensemble_apply(ens, x_bits, cfg=mc.cfg, spec=spec,
-                                         accumulation=mc.accumulation,
-                                         partial_rows=mc.partial_rows,
-                                         sa_extra_units=mc.sa_extra_units)
+                # ep/en/sa_keys are this chunk's throwaway sampled state —
+                # donated so the forward can recycle their buffers
+                out = _ensemble_apply_donated(
+                    ens.ep, ens.en, ens.sa_keys, ens.chip_ids, ens.gp,
+                    ens.gn, ens.bias_units, x_bits, scheme=ens.scheme,
+                    fan_in=ens.fan_in, cfg=mc.cfg, spec=spec,
+                    accumulation=mc.accumulation,
+                    partial_rows=mc.partial_rows,
+                    sa_extra_units=mc.sa_extra_units, backend=mc.backend)
                 out = jax.block_until_ready(out)
                 chunk_vals = {name: fn(out) for name, fn in fns.items()}
                 if host_fns:

@@ -274,7 +274,9 @@ class IRCDetector:
     def _gconv_ensemble(self, groups, x: jax.Array, cin: int, cout: int, *,
                         cfg_ni: ni.NonidealConfig,
                         sa_extra: float = 0.0,
-                        output: str = "binary") -> jax.Array:
+                        output: str = "binary",
+                        use_kernel: Optional[bool] = None,
+                        kernel_impl: str = "pallas") -> jax.Array:
         """Ensemble-mode group conv: one vmapped `ensemble_apply` per group
         services every chip of a `DetectorEnsemble` layer.
 
@@ -287,30 +289,65 @@ class IRCDetector:
         `output` passes through to `ensemble_apply`: "binary" (eval-mode SA
         decisions) or "diff" (raw analog difference — how the train-ensemble
         path turns deviation planes into per-chip pre-activation errors).
+
+        `use_kernel` routes the grouped im2col matmuls onto the fused
+        chip-batched Pallas kernel (`ensemble_apply_kernel`, bit-identical
+        on the binary/all-effects-off contracts pinned by
+        tests/test_kernel_detector.py).  None (default) consults the
+        committed autotuning table: the kernel runs only on geometries where
+        a sweep on this backend measured it faster (single-shot accumulation
+        only — the kernel's fused epilogue).  Forcing True with another
+        accumulation mode raises.  `kernel_impl="ref"` swaps in the kernel's
+        jnp oracle (interpret-free CI coverage of the routed path).
         """
-        from repro.mc.engine import ensemble_apply   # lazy: mc builds on models
+        from repro.mc.engine import ensemble_apply, ensemble_apply_kernel
+        from repro.kernels import autotune
         cfg = self.cfg
         n_groups = cout // cfg.group
         per_chip = x.ndim == 5
         B, H, W = x.shape[-4], x.shape[-3], x.shape[-2]
         xg = self._im2col_groups(x, cin, n_groups)
+        if use_kernel and cfg.accumulation != "single_shot":
+            raise ValueError(
+                "use_kernel=True requires single_shot accumulation (fused "
+                f"kernel epilogue); got {cfg.accumulation!r}")
         outs = []
         for g, ens in enumerate(groups):
             x_bits = xg[..., g, :].reshape(
                 (x.shape[0], -1, 9 * cfg.group) if per_chip
                 else (-1, 9 * cfg.group))
-            out = ensemble_apply(ens, x_bits, cfg=cfg_ni, spec=self.spec,
-                                 accumulation=cfg.accumulation,
-                                 partial_rows=cfg.partial_rows,
-                                 sa_extra_units=sa_extra,
-                                 output=output,
-                                 per_chip_x=per_chip)
+            route = use_kernel
+            if route is None:
+                route = (cfg.accumulation == "single_shot"
+                         and autotune.kernel_wins(ens.n_chips,
+                                                  x_bits.shape[-2],
+                                                  ens.n_out, ens.rows))
+            if route:
+                bm, bn, bk = autotune.best_blocks(ens.n_chips,
+                                                  x_bits.shape[-2],
+                                                  ens.n_out, ens.rows)
+                out = ensemble_apply_kernel(ens, x_bits, cfg=cfg_ni,
+                                            spec=self.spec,
+                                            sa_extra_units=sa_extra,
+                                            output=output,
+                                            per_chip_x=per_chip,
+                                            impl=kernel_impl,
+                                            bm=bm, bn=bn, bk=bk)
+            else:
+                out = ensemble_apply(ens, x_bits, cfg=cfg_ni, spec=self.spec,
+                                     accumulation=cfg.accumulation,
+                                     partial_rows=cfg.partial_rows,
+                                     sa_extra_units=sa_extra,
+                                     output=output,
+                                     per_chip_x=per_chip)
             outs.append(out.reshape(out.shape[0], B, H, W, cfg.group))
         return jnp.concatenate(outs, axis=-1)
 
     def _gconv_train_ensemble(self, blk: PyTree, groups, x: jax.Array,
                               cin: int, cout: int, *, key: jax.Array,
-                              cfg_ni: ni.NonidealConfig) -> jax.Array:
+                              cfg_ni: ni.NonidealConfig,
+                              use_kernel: Optional[bool] = None,
+                              kernel_impl: str = "pallas") -> jax.Array:
         """Ensemble-aware QAT group conv (paper Sec. V at population scale).
 
         The differentiable `mode="train"` pre-activation — chips axis folded
@@ -336,7 +373,9 @@ class IRCDetector:
         if cfg_ni.device_variation:
             dev = self._gconv_ensemble(groups, x, cin, cout,
                                        cfg_ni=ni.NonidealConfig.none(),
-                                       output="diff")
+                                       output="diff",
+                                       use_kernel=use_kernel,
+                                       kernel_impl=kernel_impl)
             pre = pre + jax.lax.stop_gradient(dev)     # adds the chips axis
         if pre.ndim == 4:                              # no variation term:
             pre = jnp.broadcast_to(pre[None], (n_chips,) + pre.shape)
@@ -408,7 +447,9 @@ class IRCDetector:
     def apply(self, params: PyTree, images: jax.Array, *, mode: str = "train",
               key: Optional[jax.Array] = None,
               cfg_ni: ni.NonidealConfig = ni.NonidealConfig.none(),
-              sa_extra: float = 0.0, ensemble=None) -> jax.Array:
+              sa_extra: float = 0.0, ensemble=None,
+              use_kernel: Optional[bool] = None,
+              kernel_impl: str = "pallas") -> jax.Array:
         """images [B,H,W,3] in [0,1] -> head predictions [B,gh,gw,A*(5+C)].
 
         mode="train": differentiable QAT; mode="eval": single-chip structural
@@ -421,6 +462,10 @@ class IRCDetector:
         [chips,B,gh,gw,A*(5+C)] predictions see each chip's frozen variation
         error plus fresh per-read SA noise (chips folded into the batch by
         the loss).
+
+        `use_kernel`/`kernel_impl` (ensemble modes only) control the
+        Pallas-kernel routing of the grouped crossbar matmuls — see
+        `_gconv_ensemble`; None defers to the committed autotuning table.
         """
         cfg = self.cfg
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -450,12 +495,14 @@ class IRCDetector:
                 if mode == "ensemble":
                     x = self._gconv_ensemble(
                         ensemble.layers[f"s{s}b{b}"], x, cin, ch,
-                        cfg_ni=cfg_ni, sa_extra=sa_extra)
+                        cfg_ni=cfg_ni, sa_extra=sa_extra,
+                        use_kernel=use_kernel, kernel_impl=kernel_impl)
                 elif mode == "train_ensemble":
                     x = self._gconv_train_ensemble(
                         params[f"s{s}b{b}"], ensemble.layers[f"s{s}b{b}"],
                         x, cin, ch, key=jax.random.fold_in(key, s * 10 + b),
-                        cfg_ni=cfg_ni)
+                        cfg_ni=cfg_ni, use_kernel=use_kernel,
+                        kernel_impl=kernel_impl)
                 else:
                     x = self._gconv(params[f"s{s}b{b}"], x, cin, ch,
                                     mode=mode,

@@ -1,0 +1,187 @@
+"""Kernel-routed detector ensemble (detector.apply use_kernel=...) and the
+block-shape autotuner behind the auto dispatch.
+
+The contract pinned here is the one the dispatch relies on: with the chips
+lowered onto the fused Pallas kernel (`ensemble_apply_kernel`, interpret
+mode on CPU) the detector's ensemble outputs are BIT-IDENTICAL to the
+kernel's jnp oracle (`kernel_impl="ref"`) through the full network — eval
+mode (binary SA decisions, chip-shared first layer AND chip-diverged
+per-chip downstream layers) and the train-ensemble deviation path alike.
+Against the default vmapped-jnp reference path the binary eval outputs must
+agree on essentially every SA decision (the analog pre-activations differ
+only by float re-association in the fused epilogue).
+
+Autotune side: absent table entries must keep problems on the reference
+path (never a silent slow kernel), committed winners must round-trip
+through the lru-cached table, and forcing the kernel outside its
+single-shot envelope must raise, not silently fall back."""
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import yolo_irc
+from repro.core import NonidealConfig
+from repro.kernels import autotune
+from repro.models import IRCDetector
+from repro.mc import build_detector_ensemble, build_train_ensemble
+
+
+def _detector(scheme="ternary", seed=0):
+    cfg = yolo_irc.smoke(scheme)
+    det = IRCDetector(cfg)
+    params = det.init(jax.random.PRNGKey(seed))
+    calib = jax.random.uniform(jax.random.PRNGKey(seed + 1), (4, 32, 32, 3))
+    return det, det.calibrate_bn(params, calib)
+
+
+class TestKernelRoutedDetector:
+    def test_eval_pallas_bit_exact_vs_kernel_oracle(self):
+        """Full-network ensemble eval with the Pallas kernel on every group
+        matmul == the same routing with the kernel's jnp oracle, bit-for-bit
+        (covers chip-shared x in the first IRC layer and per-chip x in every
+        downstream layer)."""
+        det, params = _detector("ternary")
+        imgs = jax.random.uniform(jax.random.PRNGKey(2), (2, 32, 32, 3))
+        ni = NonidealConfig.all()
+        ens = build_detector_ensemble(jax.random.PRNGKey(3), det, params, 2,
+                                      cfg=ni)
+        out_k = det.apply(params, imgs, mode="ensemble", ensemble=ens,
+                          cfg_ni=ni, use_kernel=True, kernel_impl="pallas")
+        out_r = det.apply(params, imgs, mode="ensemble", ensemble=ens,
+                          cfg_ni=ni, use_kernel=True, kernel_impl="ref")
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+    def test_eval_routed_agrees_with_reference_path(self):
+        """Kernel-routed binary eval vs the default vmapped-jnp path: the SA
+        decisions agree on >= 99% of units (float re-association in the
+        fused epilogue may flip near-threshold units, nothing more)."""
+        det, params = _detector("ternary")
+        imgs = jax.random.uniform(jax.random.PRNGKey(2), (2, 32, 32, 3))
+        ni = NonidealConfig.all()
+        ens = build_detector_ensemble(jax.random.PRNGKey(3), det, params, 2,
+                                      cfg=ni)
+        out_k = det.apply(params, imgs, mode="ensemble", ensemble=ens,
+                          cfg_ni=ni, use_kernel=True)
+        out_j = det.apply(params, imgs, mode="ensemble", ensemble=ens,
+                          cfg_ni=ni, use_kernel=False)
+        assert out_k.shape == out_j.shape
+        frac = float(np.mean(np.asarray(out_k) == np.asarray(out_j)))
+        assert frac >= 0.99, frac
+
+    def test_train_ensemble_pallas_bit_exact_vs_kernel_oracle(self):
+        """The deviation (output="diff") path through the kernel: pallas ==
+        jnp oracle bit-for-bit, and both match the reference train-ensemble
+        path to float tolerance."""
+        det, params = _detector("ternary")
+        imgs = jax.random.uniform(jax.random.PRNGKey(2), (2, 32, 32, 3))
+        ni = NonidealConfig.all()
+        ens = build_train_ensemble(jax.random.PRNGKey(4), det, params, 2,
+                                   cfg=ni)
+        key = jax.random.PRNGKey(5)
+        out_k = det.apply(params, imgs, mode="train_ensemble", key=key,
+                          cfg_ni=ni, ensemble=ens, use_kernel=True,
+                          kernel_impl="pallas")
+        out_r = det.apply(params, imgs, mode="train_ensemble", key=key,
+                          cfg_ni=ni, ensemble=ens, use_kernel=True,
+                          kernel_impl="ref")
+        out_j = det.apply(params, imgs, mode="train_ensemble", key=key,
+                          cfg_ni=ni, ensemble=ens, use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_j),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_forced_kernel_outside_single_shot_raises(self):
+        """The kernel's fused epilogue is single-shot only; forcing it on
+        the binary (partial-sum) design must raise, not silently fall
+        back."""
+        det, params = _detector("binary")
+        imgs = jax.random.uniform(jax.random.PRNGKey(2), (2, 32, 32, 3))
+        ni = NonidealConfig.all()
+        ens = build_detector_ensemble(jax.random.PRNGKey(3), det, params, 2,
+                                      cfg=ni)
+        with pytest.raises(ValueError, match="single_shot"):
+            det.apply(params, imgs, mode="ensemble", ensemble=ens,
+                      cfg_ni=ni, use_kernel=True)
+
+    def test_auto_dispatch_matches_reference_path(self):
+        """use_kernel=None consults the committed tuning table; whatever it
+        routes to must reproduce the reference path's decisions (on CPU the
+        committed table keeps everything on the jnp path, so this is
+        bit-exact; on a backend with kernel wins it's the >=99% contract
+        above)."""
+        det, params = _detector("ternary")
+        imgs = jax.random.uniform(jax.random.PRNGKey(2), (2, 32, 32, 3))
+        ni = NonidealConfig.all()
+        ens = build_detector_ensemble(jax.random.PRNGKey(3), det, params, 2,
+                                      cfg=ni)
+        out_a = det.apply(params, imgs, mode="ensemble", ensemble=ens,
+                          cfg_ni=ni)                      # auto
+        out_j = det.apply(params, imgs, mode="ensemble", ensemble=ens,
+                          cfg_ni=ni, use_kernel=False)    # forced reference
+        frac = float(np.mean(np.asarray(out_a) == np.asarray(out_j)))
+        assert frac >= 0.99, frac
+
+
+class TestAutotuneTable:
+    @pytest.fixture(autouse=True)
+    def _fresh_table(self, monkeypatch, tmp_path):
+        """Point the module at a throwaway tuning.json and drop the lru
+        cache around every test (the committed table must not leak in)."""
+        monkeypatch.setattr(autotune, "TUNING_JSON",
+                            tmp_path / "tuning.json")
+        autotune.load_table.cache_clear()
+        yield
+        autotune.load_table.cache_clear()
+
+    def test_absent_entry_stays_on_reference_path(self):
+        assert autotune.lookup(8, 128, 60, 556) is None
+        assert autotune.kernel_wins(8, 128, 60, 556) is False
+        assert autotune.best_blocks(8, 128, 60, 556) \
+            == autotune.DEFAULT_BLOCKS
+
+    def test_committed_winner_round_trips(self):
+        key = autotune.problem_key(4, 64, 60, 556)
+        autotune.TUNING_JSON.write_text(json.dumps({
+            key: {"bm": 16, "bn": 128, "bk": 256, "use_kernel": True,
+                  "kernel_us": 10.0, "ref_us": 20.0}}))
+        autotune.load_table.cache_clear()
+        assert autotune.kernel_wins(4, 64, 60, 556) is True
+        assert autotune.best_blocks(4, 64, 60, 556) == (16, 128, 256)
+        # losing entries keep their measured blocks but never dispatch
+        autotune.TUNING_JSON.write_text(json.dumps({
+            key: {"bm": 16, "bn": 128, "bk": 256, "use_kernel": False,
+                  "kernel_us": 20.0, "ref_us": 10.0}}))
+        autotune.load_table.cache_clear()
+        assert autotune.kernel_wins(4, 64, 60, 556) is False
+
+    def test_problem_key_is_backend_scoped(self):
+        assert autotune.problem_key(8, 128, 60, 556, backend="tpu") \
+            == "tpu/c8_m128_n60_k556"
+        # default backend is this process's jax backend
+        assert autotune.problem_key(8, 128, 60, 556).startswith(
+            jax.default_backend() + "/")
+
+    def test_detector_problems_cover_all_stage_geometries(self):
+        cfg = yolo_irc.smoke("ternary")
+        probs = autotune.detector_problems(cfg, batch=2, chips=8)
+        K = cfg.bias_rows + 9 * cfg.group
+        H = cfg.img_hw[0] // 2
+        assert (8, 2 * H * H, cfg.group, K) in probs
+        assert all(c == 8 and n == cfg.group and k == K
+                   for c, _, n, k in probs)
+        assert len(probs) == len(set(probs))
+
+    def test_committed_table_matches_schema(self):
+        """The ACTUAL committed tuning.json (the one dispatch reads in
+        production) parses and carries the dispatch fields."""
+        committed = Path(autotune.__file__).with_name("tuning.json")
+        table = json.loads(committed.read_text())
+        assert table, "committed tuning.json is empty"
+        for key, rec in table.items():
+            assert "/" in key
+            for field in ("bm", "bn", "bk", "use_kernel", "kernel_us",
+                          "ref_us"):
+                assert field in rec, (key, field)
