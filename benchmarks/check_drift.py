@@ -83,6 +83,17 @@ def _metrics(record: dict) -> dict:
         # chips=4 step cost relative to the single-draw step: the ensemble
         # path's own overhead factor, independent of runner speed
         out["qat_step_4chip_scale"] = 1.0 / (step_us["4"] / step_us["1"])
+    serve = record.get("serve", {})
+    if "batch_speedup" in serve:
+        # wave batching (slots=2 vs slots=1, same committee): collapses if
+        # the scheduler stops forming multi-request waves or the per-wave
+        # dispatch overhead comes back
+        out["serve_batch_speedup"] = serve["batch_speedup"]
+    if "committee_scale_4" in serve:
+        # requests/s at committee 4 relative to committee 1 (same run):
+        # the marginal cost of 4x the virtual dies per request — regresses
+        # if committee lanes stop sharing the wave program efficiently
+        out["serve_committee_scale_4"] = serve["committee_scale_4"]
     return out   # all higher-is-better
 
 

@@ -394,5 +394,89 @@ def qat_step_bench() -> List[Row]:
     return rows
 
 
+# serving bench shapes: smoke geometry, CPU-sized committees.  The wave
+# program unrolls `slots` committee lanes, so slots/committee are kept small
+# enough that the 3 compiled wave programs stay in the smoke-job budget.
+SERVE_COMMITTEES = (1, 2, 4)
+SERVE_SLOTS = 2
+SERVE_REQUESTS = 6
+
+
+def serve_bench() -> List[Row]:
+    """Detector serving throughput: requests/s vs committee size, plus the
+    batching (slots) speedup and submit->response queue-latency percentiles.
+
+    Per committee size: one warm engine pays the wave-program compile, then
+    a fresh engine (same module-level jit cache) serves ``SERVE_REQUESTS``
+    requests end to end — the timed pass is pure steady-state serving
+    (dispatch, double-buffered host decode, response assembly).  The
+    drift-gated ratios are machine-relative: ``batch_speedup`` (slots=2 vs
+    slots=1 at the same committee) and ``committee_scale_4`` (requests/s at
+    committee 4 vs 1 — the cost of 4x the virtual dies per request).
+    """
+    import numpy as np
+    from repro.configs import yolo_irc
+    from repro.data.detection import SyntheticDetectionData
+    from repro.models import IRCDetector
+    from repro.serve import DetectorServeEngine
+
+    cfg_det = yolo_irc.smoke("ternary")
+    det = IRCDetector(cfg_det)
+    data = SyntheticDetectionData(img_hw=cfg_det.img_hw,
+                                  stride=cfg_det.strides,
+                                  n_classes=cfg_det.n_classes,
+                                  n_anchors=cfg_det.n_anchors)
+    params = det.calibrate_bn(det.init(jax.random.PRNGKey(0)),
+                              data.batch_for_step(999, 8).images)
+    images = np.asarray(data.batch_for_step(1000, SERVE_REQUESTS).images)
+    reqs = [images[i] for i in range(SERVE_REQUESTS)]
+    hw = f"{cfg_det.img_hw[0]}x{cfg_det.img_hw[1]}"
+
+    def timed_rps(committee: int, slots: int):
+        warm = DetectorServeEngine(det, params, committee=committee,
+                                   batch_slots=slots)
+        warm.serve_batch(reqs[:slots])           # compile the wave program
+        compile_s = warm.stats()["wave"]["compile_s"]
+        # fresh engine, warm module-level jit cache: the timed pass (and its
+        # queue-latency percentiles) is pure steady-state serving
+        eng = DetectorServeEngine(det, params, committee=committee,
+                                  batch_slots=slots, obs=_obs())
+        t0 = time.perf_counter()
+        eng.serve_batch(reqs)
+        dt = time.perf_counter() - t0
+        stats = eng.stats()
+        stats["wave"]["compile_s"] = compile_s   # report the real compile
+        eng.log_stats()
+        return SERVE_REQUESTS / dt, stats
+
+    rows: List[Row] = []
+    record = {"slots": SERVE_SLOTS, "requests": SERVE_REQUESTS,
+              "img_hw": list(cfg_det.img_hw), "requests_per_sec": {},
+              "queue_p50_ms": {}, "queue_p95_ms": {}, "compile_s": {}}
+    for c in SERVE_COMMITTEES:
+        rps, stats = timed_rps(c, SERVE_SLOTS)
+        lat = stats["queue_latency"]
+        record["requests_per_sec"][str(c)] = rps
+        record["queue_p50_ms"][str(c)] = lat["p50"] * 1e3
+        record["queue_p95_ms"][str(c)] = lat["p95"] * 1e3
+        record["compile_s"][str(c)] = stats["wave"]["compile_s"]
+        rows.append((f"serve_det_c{c}_s{SERVE_SLOTS}_{hw}", 1e6 / rps,
+                     f"per_request;committee={c};"
+                     f"p50={lat['p50']*1e3:.0f}ms;p95={lat['p95']*1e3:.0f}ms"))
+
+    rps_single, _ = timed_rps(SERVE_COMMITTEES[1], 1)
+    rps_batched = record["requests_per_sec"][str(SERVE_COMMITTEES[1])]
+    record["single_slot_requests_per_sec"] = rps_single
+    record["batch_speedup"] = rps_batched / rps_single
+    record["committee_scale_4"] = (record["requests_per_sec"]["4"]
+                                   / record["requests_per_sec"]["1"])
+    rows.append((f"serve_det_c{SERVE_COMMITTEES[1]}_s1_{hw}",
+                 1e6 / rps_single,
+                 f"per_request;batch_speedup="
+                 f"{record['batch_speedup']:.2f}x"))
+    _merge_bench_json(record, section="serve")
+    return rows
+
+
 ALL = [mc_engine_bench, detector_mc_bench, qat_step_bench,
-       autotune_roofline_bench]
+       autotune_roofline_bench, serve_bench]

@@ -20,7 +20,11 @@ from typing import Dict, Iterable, List, Sequence, Tuple
 
 # Subtrees whose invariants back bit-identity guarantees; the committed
 # baseline may never grandfather a finding inside them (tests pin this).
-CLEAN_SUBTREES = ("src/repro/mc", "src/repro/core", "src/repro/kernels")
+# serve/ is included: the serving engine's per-request committee results are
+# promised bit-identical to run_mc_detector, so its key discipline is as
+# load-bearing as the MC engine's.
+CLEAN_SUBTREES = ("src/repro/mc", "src/repro/core", "src/repro/kernels",
+                  "src/repro/serve")
 
 BASELINE_VERSION = 1
 

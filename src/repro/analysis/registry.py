@@ -77,10 +77,7 @@ def _det_and_params(scheme: str):
 
 
 def _det_head(det):
-    cfg = det.cfg
-    gh = cfg.img_hw[0] // cfg.strides
-    gw = cfg.img_hw[1] // cfg.strides
-    return gh, gw, cfg.n_anchors * (5 + cfg.n_classes)
+    return det.head_geometry()
 
 
 def _contract_det_forward(scheme: str, mode: str) -> Optional[str]:
@@ -140,6 +137,29 @@ def _contract_pipelined_chunk(n_chips: int) -> Optional[str]:
     gh, gw, ho = _det_head(det)
     return _expect(out, (n_chips, B, gh, gw, ho), "float32",
                    f"_sampled_chunk_forward[x{n_chips}]")
+
+
+def _contract_committee_wave(slots: int, committee: int) -> Optional[str]:
+    """The serving engine's wave program: [slots] request lanes, each an
+    independent committee forward keyed by its own request key, one jitted
+    dispatch -> [slots, chips, gh, gw, ho]."""
+    import jax
+    from repro.core import NonidealConfig
+    from repro.mc.detector_mc import detector_planes, committee_wave_forward
+    det, params = _det_and_params("ternary")
+
+    def fwd(p, imgs, keys, ids):
+        planes, meta = detector_planes(det, p)
+        return committee_wave_forward(
+            p, imgs, keys, ids, planes, det_cfg=det.cfg, spec=det.spec,
+            cfg_ni=NonidealConfig.all(), sa_extra=0.0, meta=meta)
+    out = jax.eval_shape(fwd, params,
+                         _struct((slots, *det.cfg.img_hw, 3)),
+                         _struct((slots, 2), "uint32"),
+                         _struct((committee,), "uint32"))
+    gh, gw, ho = _det_head(det)
+    return _expect(out, (slots, committee, gh, gw, ho), "float32",
+                   f"committee_wave_forward[s{slots},x{committee}]")
 
 
 def _contract_qat_step(train_chips: int) -> Optional[str]:
@@ -295,6 +315,9 @@ def shape_contracts() -> List[ShapeContract]:
         ShapeContract("_sampled_chunk_forward[x3]",
                       "src/repro/mc/detector_mc.py",
                       lambda: _contract_pipelined_chunk(3), det),
+        ShapeContract("committee_wave_forward[s2,x3]",
+                      "src/repro/mc/detector_mc.py",
+                      lambda: _contract_committee_wave(2, 3), det),
         ShapeContract("qat_step[chips=1]", steps_file,
                       lambda: _contract_qat_step(1), det),
         ShapeContract("qat_step[chips=4]", steps_file,

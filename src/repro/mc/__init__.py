@@ -26,6 +26,7 @@ from repro.mc.engine import (McConfig, McResult, ensemble_apply,
                              TABLE2_ABLATION)
 from repro.mc.detector_mc import (DetectorEnsemble, build_detector_ensemble,
                                   build_train_ensemble, detector_layer_keys,
+                                  detector_planes, committee_wave_forward,
                                   run_mc_detector, run_ablation_detector)
 from repro.mc.stats import (Welford, welford_init, welford_merge,
                             welford_add_batch, welford_finalize,

@@ -57,6 +57,7 @@ class DetectorEnsemble:
 
     @property
     def n_chips(self) -> int:
+        """Population size: number of sampled dies in this ensemble."""
         return self.chip_ids.shape[0]
 
 
@@ -175,23 +176,16 @@ def detector_planes(det, params):
     return tuple(planes), tuple(meta)
 
 
-@functools.partial(jax.jit, static_argnames=("det_cfg", "spec", "cfg_ni",
-                                             "sa_extra", "meta",
-                                             "use_kernel", "kernel_impl"))
-def _sampled_chunk_forward(params, images, key, chip_ids, planes, *, det_cfg,
-                           spec: MacroSpec, cfg_ni: ni.NonidealConfig,
-                           sa_extra: float, meta,
-                           use_kernel: Optional[bool] = None,
-                           kernel_impl: str = "pallas") -> jax.Array:
-    """Fused chunk program for the pipelined sweep: sample the chunk's
-    `DetectorEnsemble` IN-TRACE (same `detector_layer_keys` stream and
-    `sample_ensemble_with_keys` ops as the eager builder — the threefry
-    sampling is bitwise deterministic, so the planes, and hence the
-    predictions, are bit-identical to the serial path; pinned by
-    tests/test_detector_mc.py) and run the ensemble forward, all in ONE
-    dispatch.  Folding the sampling into the program removes the serial
-    path's per-chunk eager-dispatch overhead and lets the whole chunk run
-    asynchronously while the host scores the previous one."""
+def _sample_and_forward(params, images, key, chip_ids, planes, *, det_cfg,
+                        spec: MacroSpec, cfg_ni: ni.NonidealConfig,
+                        sa_extra: float, meta,
+                        use_kernel: Optional[bool] = None,
+                        kernel_impl: str = "pallas") -> jax.Array:
+    """Shared trace body of `_sampled_chunk_forward` and
+    `committee_wave_forward`: rebuild each group's `MappedLayer` from the
+    hoisted planes/meta, sample the chunk's `DetectorEnsemble` in-trace, and
+    run the ensemble structural forward.  Keeping ONE body guarantees the
+    serving wave traces the exact ops of the MC chunk program per lane."""
     from repro.core.mapping import MappedLayer
     from repro.models.detector import IRCDetector
     det = IRCDetector(det_cfg, spec)
@@ -210,6 +204,63 @@ def _sampled_chunk_forward(params, images, key, chip_ids, planes, *, det_cfg,
     return det.apply(params, images, mode="ensemble", ensemble=ens,
                      cfg_ni=cfg_ni, sa_extra=sa_extra,
                      use_kernel=use_kernel, kernel_impl=kernel_impl)
+
+
+@functools.partial(jax.jit, static_argnames=("det_cfg", "spec", "cfg_ni",
+                                             "sa_extra", "meta",
+                                             "use_kernel", "kernel_impl"))
+def _sampled_chunk_forward(params, images, key, chip_ids, planes, *, det_cfg,
+                           spec: MacroSpec, cfg_ni: ni.NonidealConfig,
+                           sa_extra: float, meta,
+                           use_kernel: Optional[bool] = None,
+                           kernel_impl: str = "pallas") -> jax.Array:
+    """Fused chunk program for the pipelined sweep: sample the chunk's
+    `DetectorEnsemble` IN-TRACE (same `detector_layer_keys` stream and
+    `sample_ensemble_with_keys` ops as the eager builder — the threefry
+    sampling is bitwise deterministic, so the planes, and hence the
+    predictions, are bit-identical to the serial path; pinned by
+    tests/test_detector_mc.py) and run the ensemble forward, all in ONE
+    dispatch.  Folding the sampling into the program removes the serial
+    path's per-chunk eager-dispatch overhead and lets the whole chunk run
+    asynchronously while the host scores the previous one."""
+    return _sample_and_forward(params, images, key, chip_ids, planes,
+                               det_cfg=det_cfg, spec=spec, cfg_ni=cfg_ni,
+                               sa_extra=sa_extra, meta=meta,
+                               use_kernel=use_kernel, kernel_impl=kernel_impl)
+
+
+@functools.partial(jax.jit, static_argnames=("det_cfg", "spec", "cfg_ni",
+                                             "sa_extra", "meta",
+                                             "use_kernel", "kernel_impl"))
+def committee_wave_forward(params, images, request_keys, chip_ids, planes, *,
+                           det_cfg, spec: MacroSpec,
+                           cfg_ni: ni.NonidealConfig, sa_extra: float, meta,
+                           use_kernel: Optional[bool] = None,
+                           kernel_impl: str = "pallas") -> jax.Array:
+    """One serving wave: every request lane gets its OWN chip committee.
+
+    `images` is [slots, H, W, 3] and `request_keys` is [slots] stacked PRNG
+    keys (one `fold_in(root, request_id)` per lane).  Each lane is traced as
+    an independent `_sample_and_forward` at batch 1 — its committee sampling
+    is keyed only by that lane's request key, so a request's draws cannot
+    depend on which other requests share its wave (per-read SA noise shapes
+    would otherwise couple lanes through the batch axis).  The lanes are
+    unrolled into ONE jitted program (`slots` is a static shape), so a wave
+    still costs a single dispatch; returns [slots, chips, gh, gw, ho].
+
+    Lane `i` is bit-identical to
+    `_sampled_chunk_forward(params, images[i:i+1], request_keys[i], ...)` —
+    and hence to `run_mc_detector(fold_in(root, request_id), ...)` at the
+    same chip ids — pinned by tests/test_serve_detector.py.
+    """
+    lanes = []
+    for i in range(images.shape[0]):
+        out = _sample_and_forward(
+            params, images[i:i + 1], request_keys[i], chip_ids, planes,
+            det_cfg=det_cfg, spec=spec, cfg_ni=cfg_ni, sa_extra=sa_extra,
+            meta=meta, use_kernel=use_kernel, kernel_impl=kernel_impl)
+        lanes.append(out[:, 0])                 # [chips, gh, gw, ho]
+    return jnp.stack(lanes)
 
 
 def run_mc_detector(key: jax.Array, det, params, images: jax.Array,

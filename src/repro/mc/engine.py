@@ -90,6 +90,7 @@ def ensemble_apply(ens: ChipEnsemble, x_bits: jax.Array, *,
     counts_n = _block_reduce(x_ext, ens.gn, blk)
 
     def fwd(k_sa, ep, en):
+        """One chip's forward against the SHARED placement-plane counts."""
         i_pos, p_pos = _accumulate(_block_reduce(x_ext, ep, blk), counts_p,
                                    cfg, spec, accumulation, partial_rows)
         i_neg, p_neg = _accumulate(_block_reduce(x_ext, en, blk), counts_n,
@@ -141,6 +142,7 @@ def ensemble_apply_kernel(ens: ChipEnsemble, x_bits: jax.Array, *,
     B, N = x_ext.shape[-2], ens.n_out
 
     def periphery(k_sa):
+        """Per-chip SA offsets + comparator tie-break draws (key-split once)."""
         k_off, k_rng = jax.random.split(k_sa)
         return (jax.random.normal(k_off, (B, N), jnp.float32),
                 jax.random.bernoulli(k_rng, 0.5, (B, N)).astype(jnp.float32))
@@ -204,6 +206,8 @@ def bit_agreement_metric(ref_bits: jax.Array) -> MetricFn:
 
 
 def ones_fraction_metric() -> MetricFn:
+    """Per-chip fraction of 1-bits in the output — a cheap drift indicator
+    (a chip whose comparators saturate shows up before accuracy is scored)."""
     return lambda out: jnp.mean(out, axis=(-2, -1))
 
 
@@ -278,6 +282,8 @@ class McResult:
     host_s: float = 0.0                       # host-side metric wall
 
     def summary_line(self, metric: str = "bit_agreement") -> str:
+        """One-line mean±std + quantile report for `metric`, as printed by
+        the CLI and the benchmark rows."""
         m = self.metrics[metric]
         qs = ";".join(f"{k}={v:.4f}" for k, v in sorted(m.items())
                       if k.startswith("q"))

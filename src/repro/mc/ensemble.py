@@ -58,14 +58,17 @@ class ChipEnsemble:
 
     @property
     def n_chips(self) -> int:
+        """Sampled chip instances in this ensemble (leading axis of ep/en)."""
         return self.ep.shape[0]
 
     @property
     def rows(self) -> int:
+        """Crossbar rows per chip (bias/BN lead rows + fan-in rows)."""
         return self.ep.shape[1]
 
     @property
     def n_out(self) -> int:
+        """Output columns per chip (bitlines after pos/neg pairing)."""
         return self.ep.shape[2]
 
     @property
@@ -74,6 +77,8 @@ class ChipEnsemble:
         return self.rows - self.fan_in
 
     def planes_per_chip(self) -> bool:
+        """True when placement planes vary per chip ([chips, rows, n_out])
+        rather than being one shared [rows, n_out] copy."""
         return self.gp.ndim == 3
 
 
@@ -134,6 +139,7 @@ def shard_ensemble(ens: ChipEnsemble, mesh) -> ChipEnsemble:
     from repro.sharding.rules import chips_pspec
 
     def put(a):
+        """Shard chip-leading arrays; replicate shared planes untouched."""
         if a is None or a.ndim == 0 or a.shape[0] != ens.n_chips:
             return a    # shared planes ([rows, n_out]) stay replicated
         return jax.device_put(a, NamedSharding(

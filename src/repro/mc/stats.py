@@ -27,6 +27,7 @@ class Welford(NamedTuple):
 
 
 def welford_init(shape=()) -> Welford:
+    """Empty running state (count/mean/M2 all zero) of the given shape."""
     z = jnp.zeros(shape, jnp.float32)
     return Welford(count=jnp.zeros(shape, jnp.float32), mean=z, m2=z)
 
@@ -82,15 +83,18 @@ class StreamingMoments:
 
     @property
     def per_chip(self) -> np.ndarray:
+        """All folded per-chip values, concatenated in arrival order."""
         return (np.concatenate(self._values) if self._values
                 else np.zeros((0,), np.float32))
 
     @property
     def count(self) -> float:
+        """Chips folded in so far."""
         return float(self._state.count)
 
     @property
     def mean_value(self) -> float:
+        """Running population mean of the metric."""
         return float(self._state.mean)
 
     def stderr(self) -> float:
@@ -106,6 +110,9 @@ class StreamingMoments:
         return float(fin["std"]) / math.sqrt(n)
 
     def summary(self) -> Dict[str, float]:
+        """{count, mean, std (ddof=0), qXX...} over the folded chips — the
+        population-statistics dict reported per metric (and per serving
+        response) across the repo."""
         fin = welford_finalize(self._state)
         out = {"count": float(fin["count"]), "mean": float(fin["mean"]),
                "std": float(fin["std"])}

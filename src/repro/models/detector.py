@@ -77,6 +77,16 @@ class IRCDetector:
         self.cfg = cfg
         self.spec = spec
 
+    def head_geometry(self) -> Tuple[int, int, int]:
+        """(gh, gw, head_out) of `apply`'s raw predictions: the output grid
+        after the stem + per-stage pools and the per-cell channel count
+        `n_anchors * (5 + n_classes)`.  The serving engine, the shape
+        contracts, and the decode helpers all derive prediction shapes from
+        this one place."""
+        cfg = self.cfg
+        return (cfg.img_hw[0] // cfg.strides, cfg.img_hw[1] // cfg.strides,
+                cfg.n_anchors * (5 + cfg.n_classes))
+
     # ------------------------------------------------------------ params
     def specs(self) -> Dict[str, PyTree]:
         cfg = self.cfg

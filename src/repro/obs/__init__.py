@@ -9,6 +9,8 @@ benchmarks, serving), so the whole stack speaks one telemetry format:
                          optional jax.profiler trace
   PhaseTimer / timed_step  first-call compile time split from steady-state
                          execute time; chips/sec, steps/sec, tokens/sec
+  LatencyTracker         exact submit→response latency percentiles
+                         (the serving engine's queue-latency telemetry)
   ConvergenceMonitor     standard-error-of-the-mean per metric after each
                          MC chunk + optional `stderr_target` early stop
   collect_env / git_sha  provenance helpers (also stamped into
@@ -19,9 +21,10 @@ a metrics.jsonl stream.
 """
 from repro.obs.runlog import (RunLog, NullRunLog, NULL_RUNLOG, as_runlog,
                               collect_env, git_sha)
-from repro.obs.timers import PhaseTimer, timed_step, maybe_runlog
+from repro.obs.timers import (PhaseTimer, LatencyTracker, timed_step,
+                              maybe_runlog)
 from repro.obs.convergence import ConvergenceMonitor
 
 __all__ = ["RunLog", "NullRunLog", "NULL_RUNLOG", "as_runlog", "collect_env",
-           "git_sha", "PhaseTimer", "timed_step", "maybe_runlog",
-           "ConvergenceMonitor"]
+           "git_sha", "PhaseTimer", "LatencyTracker", "timed_step",
+           "maybe_runlog", "ConvergenceMonitor"]

@@ -86,6 +86,40 @@ class PhaseTimer:
         runlog.log_event("phase", **self.summary(), **extra)
 
 
+class LatencyTracker:
+    """Per-item latency accumulator with percentile summaries.
+
+    The serving engine records one submit→response latency per request;
+    `summary()` reports count/mean and the p50/p95/p99 the queue-latency
+    benchmark rows and `serve_wave` RunLog events carry.  Values are kept
+    raw (a float per item) — exact percentiles, same philosophy as
+    `StreamingMoments`' exact quantiles."""
+
+    def __init__(self, unit: str = "s"):
+        self.unit = unit
+        self._values: list = []
+
+    def add(self, seconds: float) -> None:
+        """Record one item's latency."""
+        self._values.append(float(seconds))
+
+    @property
+    def count(self) -> int:
+        """Number of recorded latencies."""
+        return len(self._values)
+
+    def summary(self) -> Dict[str, float]:
+        """count/mean/p50/p95/p99 over everything recorded so far."""
+        import numpy as np
+        if not self._values:
+            return {"count": 0.0}
+        v = np.asarray(self._values, np.float64)
+        return {"count": float(v.size), "mean": float(v.mean()),
+                "p50": float(np.percentile(v, 50)),
+                "p95": float(np.percentile(v, 95)),
+                "p99": float(np.percentile(v, 99))}
+
+
 def timed_step(step_fn, timer: PhaseTimer, block_on=None):
     """Wrap a jitted step so every call is one timer lap (first call =
     compile lap).  `block_on(result)` selects what to block_until_ready on;

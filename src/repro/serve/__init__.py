@@ -1,1 +1,19 @@
+"""repro.serve — batched serving engines.
+
+  ServeEngine            LM slot-wave engine: fixed-slot batched decode
+  DetectorServeEngine    population-aware detector service: async request
+                         queue with admission control, continuous wave
+                         batching onto `committee_wave_forward`, and
+                         per-request committee mean/std/quantile confidence
+
+CLI: `python -m repro.launch.serve` (`--network detector` for the committee
+service); runbook: docs/serving.md.
+"""
 from repro.serve.engine import ServeEngine, GenerationResult
+from repro.serve.detector import (DetectorServeEngine, Detection,
+                                  DetectionResponse, ServeQueueFull,
+                                  PAD_REQUEST_ID)
+
+__all__ = ["ServeEngine", "GenerationResult", "DetectorServeEngine",
+           "Detection", "DetectionResponse", "ServeQueueFull",
+           "PAD_REQUEST_ID"]

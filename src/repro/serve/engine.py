@@ -24,6 +24,8 @@ PyTree = Any
 
 @dataclasses.dataclass
 class GenerationResult:
+    """One completed LM request: the prompt echoed back, the generated
+    token ids, and whether EOS was reached before the token budget."""
     prompt: List[int]
     tokens: List[int]
     finished: bool
@@ -68,6 +70,9 @@ class ServeEngine:
 
     def generate(self, prompts: List[List[int]], max_new_tokens: int = 32
                  ) -> List[GenerationResult]:
+        """Serve `prompts` in waves of `self.slots`: batched prefill, then
+        step-wise decode until EOS or `max_new_tokens`.  Results come back
+        in prompt order regardless of wave composition."""
         results: List[Optional[GenerationResult]] = [None] * len(prompts)
         queue = list(enumerate(prompts))
         while queue:
@@ -126,5 +131,6 @@ class ServeEngine:
                 "decode": self.decode_timer.summary()}
 
     def log_stats(self) -> None:
+        """Emit the prefill/decode phase summaries to the run log."""
         self.prefill_timer.log_to(self.obs, waves=self._waves)
         self.decode_timer.log_to(self.obs, waves=self._waves)

@@ -113,6 +113,27 @@ def _nms(boxes, scores, thresh=0.45):
     return np.asarray(keep, np.int64)
 
 
+def decode_detections(pred: np.ndarray, n_anchors: int, n_classes: int,
+                      conf_thresh: float = 0.1, nms_thresh: float = 0.45):
+    """One image's head output -> per-class-NMS'd detections.
+
+    Returns (boxes [n,4] cx cy w h as image fractions, scores, classes),
+    sorted by descending score — the same decode + suppression `evaluate_map`
+    applies before AP matching, exposed for callers that want the boxes
+    themselves (the serving engine's response payload)."""
+    boxes, scores, classes = _decode_boxes(pred, n_anchors, n_classes,
+                                           conf_thresh)
+    keep_parts = []
+    for c in np.unique(classes):
+        idx = np.nonzero(classes == c)[0]
+        keep_parts.append(idx[_nms(boxes[idx], scores[idx], nms_thresh)])
+    if not keep_parts:
+        return boxes, scores, classes                 # already empty
+    keep = np.concatenate(keep_parts)
+    keep = keep[np.argsort(-scores[keep])]
+    return boxes[keep], scores[keep], classes[keep]
+
+
 def evaluate_map(preds: np.ndarray, gt_boxes: List[np.ndarray],
                  gt_classes: List[np.ndarray], n_anchors: int,
                  n_classes: int, iou_thresh: float = 0.5) -> float:

@@ -325,11 +325,13 @@ class TestBaseline:
         assert load_baseline(p) == [f]
 
     def test_clean_subtrees_enforced(self):
-        errs = assert_clean_subtrees(
-            [Finding("KEY001", "src/repro/mc/engine.py", 1, "m")])
-        assert len(errs) == 1
+        for protected in ("src/repro/mc/engine.py",
+                          "src/repro/serve/detector.py"):
+            errs = assert_clean_subtrees([Finding("KEY001", protected, 1,
+                                                  "m")])
+            assert len(errs) == 1
         assert assert_clean_subtrees(
-            [Finding("KEY001", "src/repro/serve/engine.py", 1, "m")]) == []
+            [Finding("KEY001", "src/repro/launch/serve.py", 1, "m")]) == []
 
 
 BAD_FIXTURE = textwrap.dedent("""

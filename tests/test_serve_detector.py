@@ -1,0 +1,199 @@
+"""Population-aware detector serving (repro.serve.detector): the stateless
+per-request key scheme.  A request's committee draws must be (a) independent
+of which requests preceded it or share its wave, and (b) bit-identical to
+`run_mc_detector(fold_in(root, request_id), ...)` at the same chip ids —
+the engine is a view onto the MC engine, not a second sampler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import yolo_irc
+from repro.core import NonidealConfig
+from repro.data.detection import SyntheticDetectionData
+from repro.models import IRCDetector
+from repro.mc import McConfig, run_mc_detector, detector_planes
+from repro.mc.detector_mc import _sampled_chunk_forward
+from repro.serve import (DetectorServeEngine, DetectionResponse,
+                         ServeQueueFull, PAD_REQUEST_ID)
+from repro.train.det_loss import evaluate_map_per_chip
+
+SEED = 11
+COMMITTEE = 2
+SLOTS = 2
+
+
+def _detector(scheme="ternary", seed=0):
+    cfg = yolo_irc.smoke(scheme)
+    det = IRCDetector(cfg)
+    params = det.init(jax.random.PRNGKey(seed))
+    data = SyntheticDetectionData(cfg.img_hw, cfg.n_classes, cfg.n_anchors,
+                                  cfg.strides, seed=seed + 1)
+    batch = data.batch_for_step(0, 6)
+    params = det.calibrate_bn(params, batch.images)
+    return det, params, batch
+
+
+def _engine(det, params, **kw):
+    kw.setdefault("committee", COMMITTEE)
+    kw.setdefault("batch_slots", SLOTS)
+    kw.setdefault("seed", SEED)
+    kw.setdefault("keep_committee", True)
+    return DetectorServeEngine(det, params, **kw)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One detector + a 5-request synchronous serve_batch (2 full waves +
+    one padded wave), shared by the determinism tests."""
+    det, params, batch = _detector()
+    eng = _engine(det, params)
+    imgs = np.asarray(batch.images)
+    responses = eng.serve_batch([imgs[i] for i in range(5)])
+    return det, params, batch, eng, responses
+
+
+class TestStatelessKeys:
+    def test_committee_bit_identical_to_chunk_forward(self, served):
+        """Every lane — including lanes of padded waves — must equal the MC
+        chunk program at key fold_in(root, request_id), chip ids [0..K)."""
+        det, params, batch, eng, responses = served
+        planes, meta = detector_planes(det, params)
+        root = jax.random.PRNGKey(SEED)
+        chip_ids = jnp.arange(COMMITTEE, dtype=jnp.uint32)
+        imgs = np.asarray(batch.images)
+        for r in responses:
+            ref = _sampled_chunk_forward(
+                params, imgs[r.request_id][None],
+                jax.random.fold_in(root, r.request_id), chip_ids, planes,
+                det_cfg=det.cfg, spec=det.spec, cfg_ni=NonidealConfig.all(),
+                sa_extra=0.0, meta=meta)
+            np.testing.assert_array_equal(r.committee, np.asarray(ref[:, 0]))
+
+    def test_committee_bit_identical_to_run_mc_detector(self, served):
+        """The serving response's per-chip mAPs ARE run_mc_detector's at the
+        same root/request key and chip ids (committee == n_chips)."""
+        det, params, batch, eng, responses = served
+        rid = 3
+        gt_b = [np.asarray(batch.boxes[rid])]
+        gt_c = [np.asarray(batch.classes[rid])]
+        res = run_mc_detector(
+            jax.random.fold_in(jax.random.PRNGKey(SEED), rid), det, params,
+            np.asarray(batch.images)[rid][None], gt_b, gt_c,
+            mc=McConfig(n_chips=COMMITTEE, chunk_size=COMMITTEE,
+                        cfg=NonidealConfig.all()))
+        mine = evaluate_map_per_chip(responses[rid].committee[:, None],
+                                     gt_b, gt_c, det.cfg.n_anchors,
+                                     det.cfg.n_classes)
+        np.testing.assert_array_equal(mine, res.per_chip["map50"])
+
+    def test_draws_independent_of_earlier_requests(self, served):
+        """Serving a request after DIFFERENT earlier traffic, in a different
+        wave composition and slot count, must reproduce its committee
+        bit-for-bit — the KEY004 regression for the detector engine."""
+        det, params, batch, eng, responses = served
+        imgs = np.asarray(batch.images)
+        # same rid=3 but as the FIRST request of a fresh engine with
+        # different slot count: no shared wave, no preceding requests
+        eng2 = _engine(det, params, batch_slots=1)
+        (r_alone,) = eng2.serve_batch([imgs[3]])
+        assert r_alone.request_id == 0  # ids are engine-local...
+        eng3 = _engine(det, params, batch_slots=1)
+        eng3.submit(imgs[5], request_id=3)
+        eng3.process_pending()
+        r3 = eng3.result(3)
+        # ...so replay rid=3 explicitly: different image history, different
+        # wave partner set, same (root, rid) -> same committee? No: the
+        # committee depends on rid only, but eng3 served a different IMAGE
+        # under rid 3, so compare the keyed forward instead.
+        planes, meta = detector_planes(det, params)
+        ref = _sampled_chunk_forward(
+            params, imgs[5][None],
+            jax.random.fold_in(jax.random.PRNGKey(SEED), 3),
+            jnp.arange(COMMITTEE, dtype=jnp.uint32), planes,
+            det_cfg=det.cfg, spec=det.spec, cfg_ni=NonidealConfig.all(),
+            sa_extra=0.0, meta=meta)
+        np.testing.assert_array_equal(r3.committee, np.asarray(ref[:, 0]))
+        # and the batch-served rid=3 (wave of 2, after 2 earlier requests)
+        # equals a single-slot engine serving the same image as rid=3
+        eng4 = _engine(det, params, batch_slots=1)
+        eng4.submit(imgs[3], request_id=3)
+        eng4.process_pending()
+        np.testing.assert_array_equal(eng4.result(3).committee,
+                                      responses[3].committee)
+
+    def test_async_scheduler_matches_sync(self, served):
+        """The background scheduler thread forms waves by arrival, but the
+        stateless keys make every response identical to the sync path."""
+        det, params, batch, eng, responses = served
+        imgs = np.asarray(batch.images)
+        eng2 = _engine(det, params)
+        eng2.start()
+        try:
+            rids = [eng2.submit(imgs[i]) for i in range(5)]
+            got = [eng2.result(rid, timeout=600) for rid in rids]
+        finally:
+            eng2.stop()
+        for a, b in zip(got, responses):
+            assert a.request_id == b.request_id
+            np.testing.assert_array_equal(a.committee, b.committee)
+            assert a.confidence == b.confidence
+
+
+class TestResponses:
+    def test_confidence_population_stats(self, served):
+        det, params, batch, eng, responses = served
+        for r in responses:
+            c = r.confidence
+            assert c["count"] == COMMITTEE
+            assert 0.0 <= c["mean"] <= 1.0 and c["std"] >= 0.0
+            assert set(c) >= {"q05", "q25", "q50", "q75", "q95"}
+            assert c["q05"] <= c["q50"] <= c["q95"]
+
+    def test_detections_decoded_from_committee_mean(self, served):
+        from repro.train.det_loss import decode_detections
+        det, params, batch, eng, responses = served
+        r = responses[0]
+        boxes, scores, classes = decode_detections(
+            r.committee.mean(axis=0), det.cfg.n_anchors, det.cfg.n_classes,
+            eng.conf_thresh, eng.nms_thresh)
+        assert len(r.detections) == len(scores)
+        got = np.array([d.score for d in r.detections], np.float32)
+        np.testing.assert_array_equal(got, scores.astype(np.float32))
+
+    def test_response_metadata(self, served):
+        det, params, batch, eng, responses = served
+        assert [r.request_id for r in responses] == list(range(5))
+        # 5 requests at 2 slots -> waves of 2/2/1 (last one padded)
+        assert [r.wave for r in responses] == [1, 1, 2, 2, 3]
+        assert all(r.queue_s > 0 for r in responses)
+        lat = eng.stats()["queue_latency"]
+        assert lat["count"] == 5 and lat["p50"] <= lat["p95"]
+
+
+class TestAdmissionControl:
+    def test_queue_full_rejects(self, served):
+        det, params, batch, eng, _ = served
+        img = np.asarray(batch.images)[0]
+        eng2 = _engine(det, params, max_queue=2)
+        eng2.submit(img)
+        eng2.submit(img)
+        with pytest.raises(ServeQueueFull):
+            eng2.submit(img)
+        # draining frees capacity
+        assert eng2.process_pending() == 2
+        eng2.submit(img)
+
+    def test_request_id_validation(self, served):
+        det, params, batch, eng, _ = served
+        img = np.asarray(batch.images)[0]
+        eng2 = _engine(det, params)
+        with pytest.raises(ValueError):
+            eng2.submit(img, request_id=PAD_REQUEST_ID)
+        with pytest.raises(ValueError):
+            eng2.submit(img, request_id=-1)
+        eng2.submit(img, request_id=7)
+        with pytest.raises(ValueError):      # duplicate in-flight id
+            eng2.submit(img, request_id=7)
+        eng2.process_pending()
+        assert isinstance(eng2.result(7), DetectionResponse)
