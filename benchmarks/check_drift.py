@@ -59,6 +59,11 @@ def _metrics(record: dict) -> dict:
     out = {}
     if "speedup_vs_loop" in record:
         out["layer_engine_speedup_vs_loop"] = record["speedup_vs_loop"]
+    if "measured_backend_ratio" in record:
+        # measured-device sweep vs analytic, same run — the device-seam
+        # dispatch overhead; collapses if backend objects fall out of the
+        # jit static args and start recompiling per chunk
+        out["layer_measured_backend_ratio"] = record["measured_backend_ratio"]
     det = record.get("detector", {})
     if "speedup_vs_loop" in det:
         out["detector_engine_speedup_vs_loop"] = det["speedup_vs_loop"]

@@ -118,6 +118,25 @@ def mc_engine_bench() -> List[Row]:
                  f"per_chip;speedup={record['speedup_vs_loop']:.1f}x;"
                  f"agree={m['mean']:.4f}±{m['std']:.4f}"))
 
+    # measured device backend: same sweep, planes drawn through the
+    # tabulated inverse-CDF (repro.device).  The ratio vs the analytic run
+    # is a machine-independent dispatch-overhead gauge: it collapses if the
+    # device seam falls out of the fused chunk jit (e.g. the model stops
+    # being a static argument and retriggers per-chunk compilation).
+    from repro.device import get_device_model
+    mcm = McConfig(n_chips=N_CHIPS, chunk_size=16, cfg=cfg,
+                   device=get_device_model("measured"))
+    run_mc(key, mapped, x, ref_bits=ref, mc=mcm)
+    resm = max((run_mc(key, mapped, x, ref_bits=ref, mc=mcm)
+                for _ in range(3)), key=lambda r: r.chips_per_sec)
+    record["measured_chips_per_sec"] = resm.chips_per_sec
+    record["measured_backend_ratio"] = (resm.chips_per_sec
+                                        / res.chips_per_sec)
+    rows.append((f"mc_engine_measured_{N_CHIPS}chips_{B}x{FAN_IN}x{N_OUT}",
+                 1e6 / resm.chips_per_sec,
+                 f"per_chip;device=measured;"
+                 f"ratio_vs_analytic={record['measured_backend_ratio']:.2f}"))
+
     # kernel backend: ONE fused launch per chunk (interpret mode on CPU —
     # wall-clock here characterizes the simulator, not TPU speed)
     mck = McConfig(n_chips=8, chunk_size=8, cfg=cfg, backend="kernel")

@@ -24,7 +24,7 @@ from typing import Dict, Iterable, List, Sequence, Tuple
 # promised bit-identical to run_mc_detector, so its key discipline is as
 # load-bearing as the MC engine's.
 CLEAN_SUBTREES = ("src/repro/mc", "src/repro/core", "src/repro/kernels",
-                  "src/repro/serve")
+                  "src/repro/serve", "src/repro/device")
 
 BASELINE_VERSION = 1
 

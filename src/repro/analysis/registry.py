@@ -40,6 +40,15 @@ JIT_ENTRY_POINTS: Dict[str, Set[str]] = {
     # dispatch (static tuning-table lookups on concrete shapes) — keep the
     # hygiene checks on them even though they never see a tracer
     "src/repro/kernels/autotune.py": {"kernel_wins", "best_blocks", "lookup"},
+    # device-model sampling hooks: invoked from sample_chip_planes (inlined
+    # into every jitted MC sampling root) via the `device=` seam — the
+    # call crosses a dispatch boundary the static call graph cannot follow
+    "src/repro/device/analytic.py": {"AnalyticDeviceModel.variation_mask"},
+    "src/repro/device/measured.py": {"MeasuredDeviceModel.variation_mask",
+                                     "MeasuredDeviceModel.variation_factor"},
+    "src/repro/device/retention.py": {"RetentionDrift.variation_mask"},
+    "src/repro/device/base.py": {"DeviceModel.sa_offset_sigma",
+                                 "DeviceModel.ir_drop_factors"},
 }
 
 
@@ -194,12 +203,18 @@ def _contract_qat_step(train_chips: int) -> Optional[str]:
 
 
 def _contract_ensemble_apply(kernel: bool,
-                             per_chip_x: bool = False) -> Optional[str]:
+                             per_chip_x: bool = False,
+                             device_name: Optional[str] = None,
+                             t_days: float = 0.0) -> Optional[str]:
     import jax
     from repro.core import NonidealConfig
     from repro.core.mapping import ternary_planes
     from repro.mc import engine as mc_engine
     from repro.mc.ensemble import sample_ensemble
+    device = None
+    if device_name is not None:
+        from repro.device import get_device_model
+        device = get_device_model(device_name, t_days=t_days)
     n_chips, batch, fan_in, n_out, bias_rows = 3, 4, 60, 20, 16
     cfg = NonidealConfig.all()
     x_shape = ((n_chips, batch, fan_in) if per_chip_x
@@ -207,18 +222,45 @@ def _contract_ensemble_apply(kernel: bool,
 
     def fwd(k, w, x):
         mapped = ternary_planes(w, bias_rows=bias_rows)
-        ens = sample_ensemble(k, mapped, n_chips, cfg=cfg)
+        ens = sample_ensemble(k, mapped, n_chips, cfg=cfg, device=device)
         if kernel:
             return mc_engine.ensemble_apply_kernel(ens, x, cfg=cfg,
-                                                   per_chip_x=per_chip_x)
+                                                   per_chip_x=per_chip_x,
+                                                   device=device)
         return mc_engine.ensemble_apply(ens, x, cfg=cfg,
-                                        per_chip_x=per_chip_x)
+                                        per_chip_x=per_chip_x, device=device)
     out = jax.eval_shape(fwd, _struct((2,), "uint32"),
                          _struct((fan_in, n_out)), _struct(x_shape))
     name = "ensemble_apply_kernel" if kernel else "ensemble_apply"
     if per_chip_x:
         name += "[per_chip_x]"
+    if device is not None:
+        name += f"[{device.name}]"
     return _expect(out, (n_chips, batch, n_out), "float32", name)
+
+
+def _contract_device_sampling(device_name: str, t_days: float) -> Optional[str]:
+    """The device-seam sampling roots: a measured / aged backend must sample
+    the same ensemble geometry (planes shapes, key shapes) as the analytic
+    path — backends change values, never shapes."""
+    import jax
+    from repro.core import NonidealConfig
+    from repro.core.mapping import ternary_planes
+    from repro.device import get_device_model
+    from repro.mc.ensemble import sample_ensemble
+    device = get_device_model(device_name, t_days=t_days)
+    n_chips, fan_in, n_out, bias_rows = 3, 60, 20, 16
+    rows = fan_in + bias_rows
+
+    def fwd(k, w):
+        mapped = ternary_planes(w, bias_rows=bias_rows)
+        ens = sample_ensemble(k, mapped, n_chips, cfg=NonidealConfig.all(),
+                              device=device)
+        return ens.ep
+    out = jax.eval_shape(fwd, _struct((2,), "uint32"),
+                         _struct((fan_in, n_out)))
+    return _expect(out, (n_chips, rows, n_out), "float32",
+                   f"sample_ensemble[{device.name}]")
 
 
 def _contract_ensemble_apply_donated() -> Optional[str]:
@@ -333,6 +375,19 @@ def shape_contracts() -> List[ShapeContract]:
                       lambda: _contract_ensemble_apply_donated(), det),
         ShapeContract("_fused_chunk_metrics", mc_file,
                       lambda: _contract_fused_chunk_metrics(), det),
+        ShapeContract("sample_ensemble[measured]",
+                      "src/repro/device/measured.py",
+                      lambda: _contract_device_sampling("measured", 0.0), det),
+        ShapeContract("sample_ensemble[measured@t30d]",
+                      "src/repro/device/retention.py",
+                      lambda: _contract_device_sampling("measured", 30.0),
+                      det),
+        ShapeContract("ensemble_apply[measured]", mc_file,
+                      lambda: _contract_ensemble_apply(
+                          False, device_name="measured"), det),
+        ShapeContract("ensemble_apply_kernel[measured@t30d]", mc_file,
+                      lambda: _contract_ensemble_apply(
+                          True, device_name="measured", t_days=30.0), det),
     ]
     for arch in list_archs():
         if ARCH_STATUS.get(arch) == "legacy":

@@ -53,15 +53,18 @@ def _block_reduce(x_ext: jax.Array, plane: jax.Array, block: int
 
 
 def _accumulate(blocks: jax.Array, counts: jax.Array, cfg: ni.NonidealConfig,
-                spec: MacroSpec, accumulation: str, partial_rows: int
-                ) -> Tuple[jax.Array, jax.Array]:
+                spec: MacroSpec, accumulation: str, partial_rows: int,
+                device=None) -> Tuple[jax.Array, jax.Array]:
     """Apply IR drop + nonlinearity to per-block currents.
 
     blocks/counts: [..., nb, N] (currents with variation / ideal LRS counts).
     Returns (bit-line current [..., N], activated LRS count [..., N]).
+    `device` routes the IR-drop factors through a `repro.device` backend
+    (None: the analytic linear wire model, bit-identical).
     """
     if cfg.ir_drop:
-        blocks = blocks * ni.ir_drop_factors(blocks, spec.ir_alpha, axis=-2)
+        blocks = blocks * ni._device_or_analytic(device).ir_drop_factors(
+            blocks, spec, axis=-2)
     p_total = jnp.sum(counts, axis=-2)
     if accumulation == "single_shot":
         i_line = jnp.sum(blocks, axis=-2)
@@ -90,7 +93,7 @@ def _accumulate(blocks: jax.Array, counts: jax.Array, cfg: ni.NonidealConfig,
 
 def sample_chip_planes(key: jax.Array, g_pos: jax.Array, g_neg: jax.Array,
                        scheme: str, cfg: ni.NonidealConfig,
-                       spec: MacroSpec = DEFAULT_MACRO
+                       spec: MacroSpec = DEFAULT_MACRO, device=None
                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Sample ONE chip instance: effective conductance planes + SA key.
 
@@ -100,23 +103,30 @@ def sample_chip_planes(key: jax.Array, g_pos: jax.Array, g_neg: jax.Array,
     stochastic terms.  Key-split discipline matches the historical
     `crossbar_forward` exactly, so `crossbar_forward(key, ...)` ==
     `crossbar_apply(k_sa, ..., *sample_chip_planes(key, ...)[:2])`.
+
+    `device` selects the `repro.device` backend the variation masks and HRS
+    leak come from (None: analytic — the historical closed forms,
+    bit-identical; pinned by tests/test_device.py).  Each mask consumes the
+    same split key regardless of backend, so swapping backends never shifts
+    any other draw in the key stream.
     """
+    dev = ni._device_or_analytic(device)
     k_var_p, k_var_n, k_sa = jax.random.split(key, 3)
     ep, en = g_pos, g_neg
     if cfg.device_variation:
-        sig = spec.sigma_lrs
-        ep = g_pos * ni.sample_variation_mask(k_var_p, g_pos.shape, sig)
+        ep = g_pos * dev.variation_mask(k_var_p, g_pos.shape, spec)
         if scheme == "binary":
             # ONE shared physical reference line: its per-cell variation is
             # common to every output channel (input-dependent common offset,
             # Sec. IV-B.1)
-            en = g_neg * ni.sample_variation_mask(k_var_n, (g_neg.shape[0], 1),
-                                                  sig)
+            en = g_neg * dev.variation_mask(k_var_n, (g_neg.shape[0], 1),
+                                            spec)
         else:
-            en = g_neg * ni.sample_variation_mask(k_var_n, g_neg.shape, sig)
-    if spec.hrs_leak:
-        ep = ep + (1.0 - g_pos) * spec.hrs_leak
-        en = en + (1.0 - g_neg) * spec.hrs_leak
+            en = g_neg * dev.variation_mask(k_var_n, g_neg.shape, spec)
+    leak = dev.hrs_leak_units(spec)
+    if leak:
+        ep = ep + (1.0 - g_pos) * leak
+        en = en + (1.0 - g_neg) * leak
     return ep, en, k_sa
 
 
@@ -128,7 +138,7 @@ def crossbar_apply(k_sa: jax.Array, x_ext: jax.Array,
                    accumulation: str = "single_shot",
                    partial_rows: int = 256,
                    sa_extra_units: float = 0.0,
-                   output: str = "binary") -> jax.Array:
+                   output: str = "binary", device=None) -> jax.Array:
     """Deterministic-given-key forward through ONE sampled chip.
 
     x_ext: [..., rows] word-line bits with always-on rows already prefixed;
@@ -140,21 +150,26 @@ def crossbar_apply(k_sa: jax.Array, x_ext: jax.Array,
     readout, for calibration); "sensed_diff" — the difference the periphery
     reports, with per-macro SA offset and sensing-range failures applied
     (what a digital combiner of multi-macro layers receives).
+
+    `device`: the `repro.device` backend for periphery statistics (SA
+    offset sigma, IR-drop factors); variation is already baked into ep/en
+    by `sample_chip_planes` — pass the SAME backend to both.
     """
     blk = spec.ir_block
     i_pos, p_pos = _accumulate(_block_reduce(x_ext, ep, blk),
                                _block_reduce(x_ext, gp, blk),
-                               cfg, spec, accumulation, partial_rows)
+                               cfg, spec, accumulation, partial_rows, device)
     i_neg, p_neg = _accumulate(_block_reduce(x_ext, en, blk),
                                _block_reduce(x_ext, gn, blk),
-                               cfg, spec, accumulation, partial_rows)
+                               cfg, spec, accumulation, partial_rows, device)
     if output == "diff":
         return i_pos - i_neg
     p_pair = p_pos + p_neg
     if output == "sensed_diff":
         return ni.sensed_diff(k_sa, i_pos, i_neg, p_pair, cfg, spec,
-                              sa_extra_units)
-    return ni.resolve_sa(k_sa, i_pos, i_neg, p_pair, cfg, spec, sa_extra_units)
+                              sa_extra_units, device)
+    return ni.resolve_sa(k_sa, i_pos, i_neg, p_pair, cfg, spec,
+                         sa_extra_units, device)
 
 
 def crossbar_forward(key: jax.Array, x_bits: jax.Array, mapped: MappedLayer,
@@ -163,7 +178,7 @@ def crossbar_forward(key: jax.Array, x_bits: jax.Array, mapped: MappedLayer,
                      accumulation: str = "single_shot",
                      partial_rows: int = 256,
                      sa_extra_units: float = 0.0,
-                     output: str = "binary") -> jax.Array:
+                     output: str = "binary", device=None) -> jax.Array:
     """Full structural crossbar simulation (sample one chip, then run it).
 
     x_bits: [..., fan_in] in {0,1}; returns [..., n_out]:
@@ -174,16 +189,19 @@ def crossbar_forward(key: jax.Array, x_bits: jax.Array, mapped: MappedLayer,
     (see `IRCLinear`): this function simulates ONE macro's rows and asserts
     the planes fit.  Population studies should use `repro.mc`, which samples
     the chip state once per die and amortizes this forward over a chips axis.
+    `device` selects the `repro.device` backend for BOTH the chip sampling
+    and the periphery (None: analytic, bit-identical to the legacy path).
     """
     assert mapped.rows <= spec.rows, (
         f"planes ({mapped.rows} rows) exceed the macro ({spec.rows}); tile first")
     ep, en, k_sa = sample_chip_planes(key, mapped.g_pos, mapped.g_neg,
-                                      mapped.scheme, cfg, spec)
+                                      mapped.scheme, cfg, spec, device)
     x_ext = extend_inputs(x_bits.astype(jnp.float32), mapped)
     return crossbar_apply(k_sa, x_ext, ep, en, mapped.g_pos, mapped.g_neg,
                           cfg=cfg, spec=spec, accumulation=accumulation,
                           partial_rows=partial_rows,
-                          sa_extra_units=sa_extra_units, output=output)
+                          sa_extra_units=sa_extra_units, output=output,
+                          device=device)
 
 
 # ------------------------------------------------------------------ QAT surrogate
@@ -240,6 +258,8 @@ def irc_linear_train(key: jax.Array, x: jax.Array, w_latent: jax.Array, *,
 
 @dataclasses.dataclass(frozen=True)
 class IRCLinearConfig:
+    """Static configuration of one IRCLinear layer: shape, weight scheme,
+    accumulation mode, and output stage."""
     fan_in: int
     fan_out: int
     scheme: str = "ternary"             # "ternary" (proposed) | "binary" (baseline)
@@ -261,6 +281,8 @@ class IRCLinear:
         self.spec = spec
 
     def init(self, key: jax.Array) -> dict:
+        """Initialize float parameters: fan-in-scaled Gaussian weights, plus
+        identity BN statistics when `use_bn` is set."""
         c = self.config
         k_w, k_bn = jax.random.split(key)
         scale = 1.0 / jnp.sqrt(jnp.asarray(c.fan_in, jnp.float32))
@@ -276,6 +298,8 @@ class IRCLinear:
         return params
 
     def quantized_weights(self, params: dict) -> jax.Array:
+        """Deployed weights under the configured scheme: ternary {-1,0,+1}
+        (proposed) or binary {-1,+1} (baseline), straight-through in train."""
         if self.config.scheme == "ternary":
             return ternary_quantize(params["w"])
         return binary_quantize(params["w"])
@@ -309,6 +333,8 @@ class IRCLinear:
               mode: str = "train",
               cfg: ni.NonidealConfig = ni.NonidealConfig.none(),
               sa_extra_units: float = 0.0) -> jax.Array:
+        """Run the layer: `mode="train"` uses the differentiable QAT
+        surrogate; `mode="eval"` runs the tiled structural crossbar sim."""
         c, spec = self.config, self.spec
         if mode == "train":
             return irc_linear_train(key, x, params["w"], cfg=cfg, spec=spec,

@@ -88,23 +88,28 @@ class MacroSpec:
 
     @property
     def i_lrs_ua(self) -> float:
+        """Mean LRS cell current (uA) at the word-line operating point."""
         return wl_point(self.wl_voltage)[0]
 
     @property
     def sigma_lrs(self) -> float:
+        """LRS current sigma in LRS units (override wins over WL-derived)."""
         if self.sigma_override is not None:
             return self.sigma_override
         return wl_point(self.wl_voltage)[1]
 
     @property
     def sense_low_units(self) -> float:
+        """Lower SA sensing bound expressed in LRS-current units."""
         return self.sense_low_ua / self.i_lrs_ua
 
     @property
     def sense_high_units(self) -> float:
+        """Upper SA sensing bound expressed in LRS-current units."""
         return self.sense_high_ua / self.i_lrs_ua
 
     def with_wl_voltage(self, v: float) -> "MacroSpec":
+        """Copy of this spec at a different word-line voltage (Fig. 7 sweep)."""
         return dataclasses.replace(self, wl_voltage=v)
 
     # ---------------------------------------------------------------- power

@@ -43,10 +43,12 @@ class MappedLayer:
 
     @property
     def rows(self) -> int:
+        """Total mapped rows, bias/BN rows included."""
         return self.g_pos.shape[0]
 
     @property
     def n_out(self) -> int:
+        """Number of output columns (bit-lines)."""
         return self.g_pos.shape[1]
 
 

@@ -1,0 +1,16 @@
+"""repro.device — pluggable device-model backends (the physics seam).
+
+Public surface:
+  DeviceModel            the interface (docs/device-models.md)
+  AnalyticDeviceModel    the paper's closed forms (bit-identical default)
+  MeasuredDeviceModel    tabulated variation/I-V datasets
+  RetentionDrift         time-parameterized aging wrapper (t_days)
+  get_device_model       name -> model (CLI / manifest registry)
+  default_device         resolve `device=None` to the analytic singleton
+"""
+from repro.device.base import DeviceModel
+from repro.device.analytic import (AnalyticDeviceModel, ANALYTIC_DEVICE,
+                                   default_device)
+from repro.device.measured import MeasuredDeviceModel, SAMPLE_DATASET
+from repro.device.retention import RetentionDrift
+from repro.device.registry import get_device_model, DEVICE_MODELS

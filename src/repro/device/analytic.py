@@ -1,0 +1,45 @@
+"""The analytic device backend: the paper's closed-form models, verbatim.
+
+`AnalyticDeviceModel` is the normative implementation of the `DeviceModel`
+seam — its hooks are EXACTLY the expressions the pre-seam code inlined
+(`ni.sample_variation_mask` with `spec.sigma_lrs`, `spec.hrs_leak`, the
+Fig. 9 SA polynomial, the linear IR-drop model), in the same op order, so
+`device=None` / `device=AnalyticDeviceModel()` is bit-identical to the
+historical sampling path (pinned by tests/test_device.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core import nonideal as ni
+from repro.core.macro import MacroSpec, DEFAULT_MACRO
+from repro.device.base import DeviceModel
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticDeviceModel(DeviceModel):
+    """Closed-form log-normal variation + spec-driven HRS leak (the paper's
+    measured fits, parameterized entirely by `MacroSpec`)."""
+
+    name = "analytic"
+
+    def variation_mask(self, key: jax.Array, shape,
+                       spec: MacroSpec = DEFAULT_MACRO) -> jax.Array:
+        """Log-normal per-cell mask at the spec's operating-point sigma —
+        the exact draw `sample_chip_planes` historically made."""
+        return ni.sample_variation_mask(key, shape, spec.sigma_lrs)
+
+    def hrs_leak_units(self, spec: MacroSpec = DEFAULT_MACRO) -> float:
+        """The spec's HRS leak constant (~1e-4 units: 1e9 vs 1e5 ohm)."""
+        return float(spec.hrs_leak)
+
+
+#: the process-wide analytic singleton every `device=None` seam resolves to
+ANALYTIC_DEVICE = AnalyticDeviceModel()
+
+
+def default_device(device):
+    """Resolve a `device=` argument: None means the analytic backend."""
+    return ANALYTIC_DEVICE if device is None else device

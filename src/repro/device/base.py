@@ -1,0 +1,83 @@
+"""`DeviceModel` — the pluggable seam between the RRAM device physics and
+everything that consumes it (crossbar sim, MC engine, detector, serving).
+
+The paper's robustness story rests on analytic models of device variation,
+SA offset and IR drop; this interface makes those planes come from
+*interchangeable* sources — the closed-form models (`AnalyticDeviceModel`),
+measured variation / I-V datasets (`MeasuredDeviceModel`), or any backend
+wrapped in an aging timeline (`RetentionDrift`) — without touching the MC
+engine or the detector.  Every consumer takes `device=None` and resolves it
+through `default_device`, so the legacy call sites stay bit-identical to the
+pre-seam code (the analytic implementation IS the old math, moved).
+
+Contract for implementations (see docs/device-models.md):
+
+  * every hook is a pure function of its inputs — no hidden state, no host
+    RNG; stochastic draws consume ONLY the passed key (the fold_in key
+    discipline of `repro.mc` depends on it);
+  * instances must be hashable and cheaply equal-comparable (frozen
+    dataclasses with tuple/float fields) — they ride through `jax.jit` as
+    static arguments, so an unhashable model would fail to trace and a
+    hash-unstable one would retrigger compilation;
+  * hooks returning Python floats (`hrs_leak_units`) must not trace: they
+    feed Python-level control flow at trace time.
+"""
+from __future__ import annotations
+
+import abc
+
+import jax
+
+from repro.core import nonideal as ni
+from repro.core.macro import MacroSpec, DEFAULT_MACRO
+
+
+class DeviceModel(abc.ABC):
+    """Where conductance planes and periphery statistics come from.
+
+    Device-side hooks (`variation_mask`, `hrs_leak_units`) are abstract —
+    they are what distinguishes an analytic fit from a measured array.
+    Periphery-side hooks (`sa_offset_sigma`, `ir_drop_factors`) default to
+    the paper's circuit models, shared by all device backends; a backend
+    that overrides them must also clear `analytic_periphery` so the fused
+    Pallas kernel path (whose epilogue hardcodes the analytic periphery)
+    refuses to route it instead of silently computing the wrong thing.
+    """
+
+    #: short backend identifier, recorded in run manifests and bench rows
+    name: str = "base"
+
+    @property
+    def analytic_periphery(self) -> bool:
+        """True while SA-offset/IR-drop hooks are the analytic closed forms
+        (the contract the fused kernel epilogue bakes in)."""
+        return True
+
+    @abc.abstractmethod
+    def variation_mask(self, key: jax.Array, shape,
+                       spec: MacroSpec = DEFAULT_MACRO) -> jax.Array:
+        """Per-cell multiplicative current mask for programmed LRS cells.
+
+        Drawn once per chip at programming time (`sample_chip_planes`), not
+        per read.  Must consume only `key`; shape/dtype: `shape` float32.
+        """
+
+    @abc.abstractmethod
+    def hrs_leak_units(self, spec: MacroSpec = DEFAULT_MACRO) -> float:
+        """HRS (non-formed cell) leak current in LRS units, as a PYTHON
+        float — it parameterizes the conductance mapping at trace time
+        (`ep = ep + (1 - g_pos) * leak`) and gates Python control flow."""
+
+    def sa_offset_sigma(self, p: jax.Array, spec: MacroSpec = DEFAULT_MACRO,
+                        extra_units: float = 0.0) -> jax.Array:
+        """Std of the input-referred SA offset current at activated-LRS
+        count `p` — analytic default: half the required difference g(p)
+        from the paper's Fig. 9 (+ the Table IV tolerance margin)."""
+        return 0.5 * (ni.sa_required_diff(p, spec) + extra_units)
+
+    def ir_drop_factors(self, block_currents: jax.Array,
+                        spec: MacroSpec = DEFAULT_MACRO,
+                        axis: int = -1) -> jax.Array:
+        """Per-block current-retention factors along a bit-line — analytic
+        default: the paper's linear cumulative-wire-drop model."""
+        return ni.ir_drop_factors(block_currents, spec.ir_alpha, axis=axis)

@@ -1,0 +1,107 @@
+"""Measured device backend: tabulated variation quantiles + I-V curves.
+
+A real array's LRS spread rarely matches the closed-form fit exactly; this
+backend draws variation through the INVERSE-CDF of a measured quantile
+table (z ~ N(0,1) -> u = Phi(z) -> linear interpolation of the tabulated
+current factor at quantile u), so any digitized distribution plugs in
+without re-deriving a parametric fit.  The HRS leak comes from the measured
+LRS/HRS I-V table at the spec's read voltage instead of the spec constant.
+
+Tables are stored as tuples (hashable — the model rides through `jax.jit`
+as a static argument) and ship as JSON under `repro/device/data/`; see
+docs/device-models.md for the dataset format and how to register your own.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.macro import MacroSpec, DEFAULT_MACRO
+from repro.device.base import DeviceModel
+
+#: packaged sample datasets live next to this module
+DATA_DIR = Path(__file__).resolve().parent / "data"
+
+#: the default packaged dataset (paper-scale 40nm RRAM sample table)
+SAMPLE_DATASET = DATA_DIR / "sample_lrs_40nm.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredDeviceModel(DeviceModel):
+    """Interpolating backend over a measured variation/I-V dataset.
+
+    dataset:     dataset name (from the JSON), recorded in manifests.
+    var_q:       variation quantile grid, strictly increasing in (0, 1).
+    var_factor:  LRS current factor at each quantile (median ~ 1.0).
+    iv_v:        I-V voltage grid (V across the 1T1R cell).
+    iv_lrs_ua:   measured LRS cell current (uA) at each voltage.
+    iv_hrs_ua:   measured HRS cell current (uA) at each voltage.
+    """
+
+    dataset: str
+    var_q: Tuple[float, ...]
+    var_factor: Tuple[float, ...]
+    iv_v: Tuple[float, ...]
+    iv_lrs_ua: Tuple[float, ...]
+    iv_hrs_ua: Tuple[float, ...]
+
+    name = "measured"
+
+    @classmethod
+    def from_file(cls, path: Optional[Union[str, Path]] = None
+                  ) -> "MeasuredDeviceModel":
+        """Load a dataset JSON (default: the packaged sample table).
+
+        Expected schema — see docs/device-models.md:
+          {"name": ..., "variation": {"quantile": [...], "factor": [...]},
+           "iv": {"v": [...], "i_lrs_ua": [...], "i_hrs_ua": [...]}}
+        """
+        p = Path(path) if path is not None else SAMPLE_DATASET
+        d = json.loads(p.read_text())
+        q = tuple(float(v) for v in d["variation"]["quantile"])
+        f = tuple(float(v) for v in d["variation"]["factor"])
+        if len(q) != len(f) or len(q) < 2:
+            raise ValueError(f"{p}: variation table needs >= 2 aligned "
+                             f"(quantile, factor) points")
+        if any(b <= a for a, b in zip(q, q[1:])):
+            raise ValueError(f"{p}: variation quantiles must be strictly "
+                             f"increasing")
+        iv = d["iv"]
+        return cls(dataset=str(d.get("name", p.stem)), var_q=q, var_factor=f,
+                   iv_v=tuple(float(v) for v in iv["v"]),
+                   iv_lrs_ua=tuple(float(v) for v in iv["i_lrs_ua"]),
+                   iv_hrs_ua=tuple(float(v) for v in iv["i_hrs_ua"]))
+
+    def variation_factor(self, u: jax.Array) -> jax.Array:
+        """Tabulated inverse CDF: quantile u in [0, 1] -> LRS current
+        factor.  Linear between grid points; beyond the measured extremes
+        the factor clamps to the end values (jnp.interp semantics) — the
+        tails a finite measurement cannot speak to."""
+        return jnp.interp(u, jnp.asarray(self.var_q, jnp.float32),
+                          jnp.asarray(self.var_factor, jnp.float32))
+
+    def variation_mask(self, key: jax.Array, shape,
+                       spec: MacroSpec = DEFAULT_MACRO) -> jax.Array:
+        """Per-cell mask via inverse-CDF sampling of the measured table.
+
+        Consumes `key` exactly like the analytic backend (one standard
+        normal per cell), so swapping backends never shifts any OTHER draw
+        in the fold_in stream.  `spec.sigma_lrs` is ignored — the spread is
+        the dataset's.
+        """
+        z = jax.random.normal(key, shape, dtype=jnp.float32)
+        u = jax.scipy.stats.norm.cdf(z)
+        return self.variation_factor(u).astype(jnp.float32)
+
+    def hrs_leak_units(self, spec: MacroSpec = DEFAULT_MACRO) -> float:
+        """HRS/LRS current ratio from the measured I-V table at the spec's
+        read voltage (host-side numpy interpolation — a Python float)."""
+        lrs = float(np.interp(spec.v_read, self.iv_v, self.iv_lrs_ua))
+        hrs = float(np.interp(spec.v_read, self.iv_v, self.iv_hrs_ua))
+        return hrs / lrs

@@ -1,0 +1,108 @@
+"""Retention/drift timelines: time-parameterize ANY device backend.
+
+ReRAM conductance is not stable over deployment time: programmed LRS cells
+drift toward higher resistance (power-law decay, the standard
+G(t) = G0 * (1 + t/t0)^-nu retention model) and the cell-to-cell spread
+widens as individual cells drift at different rates.  `RetentionDrift`
+wraps any `DeviceModel` with both effects at age `t_days`, so
+`run_mc_detector` / `run_ablation_detector` sweeps over a list of ages
+produce "mAP after N days" curves from the same chip key stream
+(`launch.mc --t-days 0,30,365`).
+
+At `t_days=0` the wrapper is EXACTLY the identity — it returns the base
+backend's arrays untouched and consumes no extra randomness — so a zero-age
+sweep is bit-identical to the unwrapped backend (pinned by
+tests/test_device.py).  The per-cell drift draw is keyed by
+`fold_in(key, _DRIFT_SALT)`, leaving the base backend's consumption of
+`key` unchanged: chip c's day-0 identity is preserved inside its own aging
+curve.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.macro import MacroSpec, DEFAULT_MACRO
+from repro.device.base import DeviceModel
+
+#: key-domain salt separating the drift draw from the base variation draw
+#: (outside the small chip/layer/group fold_in lattices, so it cannot
+#: collide with any chip-identity stream)
+_DRIFT_SALT = 0x0D21F7
+
+
+@dataclasses.dataclass(frozen=True)
+class RetentionDrift(DeviceModel):
+    """Age a device backend by `t_days`.
+
+    base:        the wrapped backend (analytic, measured, ...).
+    t_days:      deployment age in days (0 = programming day, identity).
+    t0_days:     retention time constant of the power-law decay.
+    drift_nu:    decay exponent — median LRS current falls as
+                 (1 + t/t0)^-nu (~3% at 30 days, ~7% at a year, defaults).
+    spread_rate: log-space sigma growth per log-time unit — per-cell drift
+                 dispersion, sigma_d(t) = spread_rate * log1p(t/t0).
+
+    HRS cells are non-formed and effectively stable (>1e9 ohm), so the leak
+    and the periphery hooks delegate to the base backend unchanged; aging
+    acts through the LRS variation planes only.
+    """
+
+    base: DeviceModel
+    t_days: float = 0.0
+    t0_days: float = 1.0
+    drift_nu: float = 0.05
+    spread_rate: float = 0.02
+
+    @property
+    def name(self) -> str:
+        """Backend id with the age stamped in (for manifests/bench rows)."""
+        return f"{self.base.name}@t{self.t_days:g}d"
+
+    @property
+    def analytic_periphery(self) -> bool:
+        """Aging touches the device planes only — periphery is the base's."""
+        return self.base.analytic_periphery
+
+    def _decay(self) -> float:
+        """Median current-retention factor at age t (Python float)."""
+        return float((1.0 + self.t_days / self.t0_days) ** (-self.drift_nu))
+
+    def _spread_sigma(self) -> float:
+        """Log-space sigma of the per-cell drift dispersion at age t."""
+        return float(self.spread_rate * math.log1p(self.t_days / self.t0_days))
+
+    def variation_mask(self, key: jax.Array, shape,
+                       spec: MacroSpec = DEFAULT_MACRO) -> jax.Array:
+        """Base variation mask times the age-t drift factor.
+
+        The drift draw consumes `fold_in(key, _DRIFT_SALT)` — the base
+        backend sees `key` itself, so day-0 and day-N share the programming
+        draw and differ only by the aging term.  At t_days=0 the base mask
+        is returned UNTOUCHED (no extra ops, no extra key use).
+        """
+        mask = self.base.variation_mask(key, shape, spec)
+        if self.t_days == 0.0:
+            return mask
+        z = jax.random.normal(jax.random.fold_in(key, _DRIFT_SALT), shape,
+                              dtype=jnp.float32)
+        drift = self._decay() * jnp.exp(self._spread_sigma() * z)
+        return mask * drift
+
+    def hrs_leak_units(self, spec: MacroSpec = DEFAULT_MACRO) -> float:
+        """HRS cells are stable: the base backend's leak."""
+        return self.base.hrs_leak_units(spec)
+
+    def sa_offset_sigma(self, p: jax.Array, spec: MacroSpec = DEFAULT_MACRO,
+                        extra_units: float = 0.0) -> jax.Array:
+        """Periphery does not age in this model: delegate to the base."""
+        return self.base.sa_offset_sigma(p, spec, extra_units)
+
+    def ir_drop_factors(self, block_currents: jax.Array,
+                        spec: MacroSpec = DEFAULT_MACRO,
+                        axis: int = -1) -> jax.Array:
+        """Wire parasitics do not age in this model: delegate to the base."""
+        return self.base.ir_drop_factors(block_currents, spec, axis=axis)

@@ -49,6 +49,11 @@ summary only.
   # side by side with whole-network population mAP
   PYTHONPATH=src python -m repro.launch.mc --network detector --chips 16 \
       --det-steps 100 --train-chips 4
+
+  # aging timeline: measured device backend swept over deployment ages —
+  # every ablation column repeats per age ("mAP after N days" curves)
+  PYTHONPATH=src python -m repro.launch.mc --network detector --chips 16 \
+      --device-model measured --t-days 0,30,365
 """
 from __future__ import annotations
 
@@ -76,6 +81,25 @@ def build_layer(args):
          > 1.0 - args.density).astype(jnp.float32)
     ref_bits = (ideal_ternary_matmul(x, w) > 0).astype(jnp.float32)
     return mapped, x, ref_bits
+
+
+def _parse_t_days(text):
+    """--t-days "0,30,365" -> [0.0, 30.0, 365.0] (one age per sweep pass)."""
+    try:
+        ts = [float(t) for t in str(text).split(",") if t.strip() != ""]
+    except ValueError:
+        raise SystemExit(f"--t-days must be a comma list of numbers, "
+                         f"got {text!r}")
+    if not ts:
+        raise SystemExit("--t-days needs at least one age")
+    if any(t < 0 for t in ts):
+        raise SystemExit("--t-days ages must be >= 0")
+    return ts
+
+
+def _age_label(name, t, ts):
+    """Column label with the age suffixed when sweeping multiple ages."""
+    return name if len(ts) == 1 else f"{name}@t{t:g}d"
 
 
 def _ablation_columns(args, table):
@@ -165,6 +189,7 @@ def run_detector(args) -> None:
     import jax
     from repro.configs import yolo_irc
     from repro.data.detection import SyntheticDetectionData
+    from repro.device import get_device_model
     from repro.models import IRCDetector
     from repro.mc import McConfig, run_mc_detector, TABLE2_ABLATION
     from repro.obs import PhaseTimer
@@ -188,6 +213,7 @@ def run_detector(args) -> None:
     mc = McConfig(n_chips=args.chips, chunk_size=args.chunk)
     key = jax.random.PRNGKey(args.seed)
     columns = _ablation_columns(args, TABLE2_ABLATION)
+    ts = _parse_t_days(args.t_days)
     # auto defers to the committed kernels/tuning.json; kernel forces the
     # Pallas chip-batched path (interpret mode on CPU)
     use_kernel = {"auto": None, "jnp": False, "kernel": True}[args.det_backend]
@@ -196,57 +222,69 @@ def run_detector(args) -> None:
           f"batch={args.det_batch} chips={args.chips} "
           f"qat_steps={args.det_steps} train_chips={args.train_chips} "
           f"backend={args.det_backend} "
-          f"pipeline={not args.no_pipeline}")
+          f"pipeline={not args.no_pipeline} "
+          f"device={args.device_model} t_days={','.join(f'{t:g}' for t in ts)}")
     print(f"{'checkpoint':10s} {'config':14s} {'map50 mean±std':>16s} "
           f"{'drop':>7s} {'q05':>7s} {'q50':>7s} {'q95':>7s} "
           f"{'chips':>5s} {'chips/s':>8s} {'compile_s':>9s}")
     csv_lines = ["checkpoint,config,map50_mean,map50_std,drop_vs_ideal,"
-                 "q05,q50,q95,chips,chips_per_s,compile_s"]
+                 "q05,q50,q95,chips,chips_per_s,compile_s,"
+                 "device_model,t_days"]
     report = {"args": vars(args), "run_id": obs.manifest.get("run_id"),
               "results": {}}
     for ck, params in checkpoints.items():
         params = det.calibrate_bn(params, calib.images)
-        results = {}
-        for name, cfg_ni in columns:
-            obs.log_event("ablation_column", checkpoint=ck, column=name)
-            results[name] = run_mc_detector(
-                key, det, params, ev.images, ev.boxes, ev.classes,
-                mc=dataclasses.replace(mc, cfg=cfg_ni), obs=obs,
-                stderr_target=args.stderr_target,
-                pipeline=not args.no_pipeline, use_kernel=use_kernel)
-        ideal_mean = results["ideal"].metrics["map50"]["mean"]
         report["results"][ck] = {}
-        for name, res in results.items():
-            m = res.metrics["map50"]
-            drop = ideal_mean - m["mean"]
-            print(f"{ck:10s} {name:14s} "
-                  f"{m['mean']:8.4f}±{m['std']:6.4f} {drop:7.4f} "
-                  f"{m.get('q05', float('nan')):7.4f} "
-                  f"{m.get('q50', float('nan')):7.4f} "
-                  f"{m.get('q95', float('nan')):7.4f} "
-                  f"{res.n_chips:5d} {res.chips_per_sec:8.2f} "
-                  f"{res.compile_s:9.2f}")
-            csv_lines.append(
-                f"{ck},{name},{m['mean']:.6f},{m['std']:.6f},{drop:.6f},"
-                f"{m.get('q05', float('nan')):.6f},"
-                f"{m.get('q50', float('nan')):.6f},"
-                f"{m.get('q95', float('nan')):.6f},{res.n_chips},"
-                f"{res.chips_per_sec:.2f},{res.compile_s:.4f}")
-            obs.save_array(f"per_chip_map50_{ck}_{name}",
-                           res.per_chip["map50"])
-            report["results"][ck][name] = {
-                "metrics": res.metrics, "wall_s": res.wall_s,
-                "compile_s": res.compile_s,
-                "chips_per_sec": res.chips_per_sec,
-                "device_s": res.device_s, "host_s": res.host_s,
-                "per_chip_map50": res.per_chip["map50"].tolist()}
+        for t in ts:
+            device = get_device_model(args.device_model, t_days=t)
+            results = {}
+            for name, cfg_ni in columns:
+                obs.log_event("ablation_column", checkpoint=ck, column=name,
+                              device_model=args.device_model, t_days=t)
+                results[name] = run_mc_detector(
+                    key, det, params, ev.images, ev.boxes, ev.classes,
+                    mc=dataclasses.replace(mc, cfg=cfg_ni, device=device),
+                    obs=obs, stderr_target=args.stderr_target,
+                    pipeline=not args.no_pipeline, use_kernel=use_kernel)
+            # the drop is measured against the SAME age's simulated ideal
+            ideal_mean = results["ideal"].metrics["map50"]["mean"]
+            for name, res in results.items():
+                label = _age_label(name, t, ts)
+                m = res.metrics["map50"]
+                drop = ideal_mean - m["mean"]
+                print(f"{ck:10s} {label:14s} "
+                      f"{m['mean']:8.4f}±{m['std']:6.4f} {drop:7.4f} "
+                      f"{m.get('q05', float('nan')):7.4f} "
+                      f"{m.get('q50', float('nan')):7.4f} "
+                      f"{m.get('q95', float('nan')):7.4f} "
+                      f"{res.n_chips:5d} {res.chips_per_sec:8.2f} "
+                      f"{res.compile_s:9.2f}")
+                csv_lines.append(
+                    f"{ck},{label},{m['mean']:.6f},{m['std']:.6f},"
+                    f"{drop:.6f},"
+                    f"{m.get('q05', float('nan')):.6f},"
+                    f"{m.get('q50', float('nan')):.6f},"
+                    f"{m.get('q95', float('nan')):.6f},{res.n_chips},"
+                    f"{res.chips_per_sec:.2f},{res.compile_s:.4f},"
+                    f"{args.device_model},{t:g}")
+                obs.save_array(f"per_chip_map50_{ck}_{label}",
+                               res.per_chip["map50"])
+                report["results"][ck][label] = {
+                    "metrics": res.metrics, "wall_s": res.wall_s,
+                    "compile_s": res.compile_s,
+                    "chips_per_sec": res.chips_per_sec,
+                    "device_s": res.device_s, "host_s": res.host_s,
+                    "device_model": args.device_model, "t_days": t,
+                    "per_chip_map50": res.per_chip["map50"].tolist()}
     _write_csv(args, obs, csv_lines)
     _write_report(args, obs, report)
-    obs.finalize(status="ok", network="detector")
+    obs.finalize(status="ok", network="detector",
+                 device_model=args.device_model, t_days=ts)
 
 
 def run_layer(args) -> None:
     import jax
+    from repro.device import get_device_model
     from repro.mc import McConfig, run_mc, TABLE2_ABLATION
 
     obs = _make_runlog(args)
@@ -255,53 +293,65 @@ def run_layer(args) -> None:
                   accumulation=args.accumulation, backend=args.backend,
                   calibrate=args.calibrate)
     key = jax.random.PRNGKey(args.seed)
+    ts = _parse_t_days(args.t_days)
+    columns = _ablation_columns(args, TABLE2_ABLATION)
 
-    results = {}
-    for name, cfg in _ablation_columns(args, TABLE2_ABLATION):
-        obs.log_event("ablation_column", column=name)
-        results[name] = run_mc(key, mapped, x, ref_bits=ref_bits,
-                               mc=dataclasses.replace(mc, cfg=cfg), obs=obs,
-                               stderr_target=args.stderr_target)
-
-    ideal_mean = results["ideal"].metrics["bit_agreement"]["mean"]
     print(f"# {args.scheme} {args.fan_in}x{args.n_out} batch={args.batch} "
-          f"chips={args.chips} backend={args.backend}"
+          f"chips={args.chips} backend={args.backend} "
+          f"device={args.device_model} t_days={','.join(f'{t:g}' for t in ts)}"
           + (" calibrated" if args.calibrate else ""))
     print(f"{'config':14s} {'agree mean±std':>16s} {'drop':>7s} "
           f"{'q05':>7s} {'q50':>7s} {'q95':>7s} {'chips':>5s} "
           f"{'chips/s':>8s} {'compile_s':>9s}")
     csv_lines = ["config,agree_mean,agree_std,drop_vs_ideal,q05,q50,q95,"
-                 "chips,chips_per_s,compile_s"]
+                 "chips,chips_per_s,compile_s,device_model,t_days"]
     report = {"args": vars(args), "run_id": obs.manifest.get("run_id"),
               "results": {}}
-    for name, res in results.items():
-        m = res.metrics["bit_agreement"]
-        drop = ideal_mean - m["mean"]
-        print(f"{name:14s} {m['mean']:8.4f}±{m['std']:6.4f} {drop:7.4f} "
-              f"{m.get('q05', float('nan')):7.4f} "
-              f"{m.get('q50', float('nan')):7.4f} "
-              f"{m.get('q95', float('nan')):7.4f} "
-              f"{res.n_chips:5d} {res.chips_per_sec:8.2f} "
-              f"{res.compile_s:9.2f}")
-        csv_lines.append(
-            f"{name},{m['mean']:.6f},{m['std']:.6f},{drop:.6f},"
-            f"{m.get('q05', float('nan')):.6f},"
-            f"{m.get('q50', float('nan')):.6f},"
-            f"{m.get('q95', float('nan')):.6f},{res.n_chips},"
-            f"{res.chips_per_sec:.2f},{res.compile_s:.4f}")
-        for metric in ("bit_agreement", "ones_fraction"):
-            obs.save_array(f"per_chip_{metric}_{name}", res.per_chip[metric])
-        report["results"][name] = {
-            "metrics": res.metrics, "wall_s": res.wall_s,
-            "compile_s": res.compile_s,
-            "chips_per_sec": res.chips_per_sec,
-            "per_chip_bit_agreement":
-                res.per_chip["bit_agreement"].tolist(),
-            "bias_units": (res.bias_units.tolist()
-                           if res.bias_units is not None else None)}
+    for t in ts:
+        device = get_device_model(args.device_model, t_days=t)
+        results = {}
+        for name, cfg in columns:
+            obs.log_event("ablation_column", column=name,
+                          device_model=args.device_model, t_days=t)
+            results[name] = run_mc(
+                key, mapped, x, ref_bits=ref_bits,
+                mc=dataclasses.replace(mc, cfg=cfg, device=device), obs=obs,
+                stderr_target=args.stderr_target)
+        # the drop is measured against the SAME age's simulated ideal
+        ideal_mean = results["ideal"].metrics["bit_agreement"]["mean"]
+        for name, res in results.items():
+            label = _age_label(name, t, ts)
+            m = res.metrics["bit_agreement"]
+            drop = ideal_mean - m["mean"]
+            print(f"{label:14s} {m['mean']:8.4f}±{m['std']:6.4f} {drop:7.4f} "
+                  f"{m.get('q05', float('nan')):7.4f} "
+                  f"{m.get('q50', float('nan')):7.4f} "
+                  f"{m.get('q95', float('nan')):7.4f} "
+                  f"{res.n_chips:5d} {res.chips_per_sec:8.2f} "
+                  f"{res.compile_s:9.2f}")
+            csv_lines.append(
+                f"{label},{m['mean']:.6f},{m['std']:.6f},{drop:.6f},"
+                f"{m.get('q05', float('nan')):.6f},"
+                f"{m.get('q50', float('nan')):.6f},"
+                f"{m.get('q95', float('nan')):.6f},{res.n_chips},"
+                f"{res.chips_per_sec:.2f},{res.compile_s:.4f},"
+                f"{args.device_model},{t:g}")
+            for metric in ("bit_agreement", "ones_fraction"):
+                obs.save_array(f"per_chip_{metric}_{label}",
+                               res.per_chip[metric])
+            report["results"][label] = {
+                "metrics": res.metrics, "wall_s": res.wall_s,
+                "compile_s": res.compile_s,
+                "chips_per_sec": res.chips_per_sec,
+                "device_model": args.device_model, "t_days": t,
+                "per_chip_bit_agreement":
+                    res.per_chip["bit_agreement"].tolist(),
+                "bias_units": (res.bias_units.tolist()
+                               if res.bias_units is not None else None)}
     _write_csv(args, obs, csv_lines)
     _write_report(args, obs, report)
-    obs.finalize(status="ok", network="layer")
+    obs.finalize(status="ok", network="layer",
+                 device_model=args.device_model, t_days=ts)
 
 
 def main() -> None:
@@ -350,6 +400,16 @@ def main() -> None:
     ap.add_argument("--ablation", default="all",
                     help="'table2' for the full effect sweep, or one column "
                          "name (ideal|devvar|devvar+nl|devvar+nl+peri|all)")
+    ap.add_argument("--device-model", default="analytic",
+                    choices=["analytic", "measured"],
+                    help="repro.device backend chips are sampled from: "
+                         "analytic (the paper's closed forms, default) or "
+                         "measured (the packaged tabulated dataset)")
+    ap.add_argument("--t-days", default="0",
+                    help="comma list of deployment ages in days; each age "
+                         "wraps the backend in a RetentionDrift timeline and "
+                         "repeats the sweep (0 = programming day; e.g. "
+                         "'0,30,365' for an aging curve)")
     ap.add_argument("--calibrate", action="store_true",
                     help="per-die extra-bias calibration before evaluation")
     ap.add_argument("--seed", type=int, default=0)

@@ -75,12 +75,13 @@ def detector_layer_keys(key: jax.Array, chip_ids: jax.Array, layer_id: int,
 def build_detector_ensemble(key: jax.Array, det, params, n_chips: int = 0, *,
                             chip_ids: Optional[jax.Array] = None,
                             cfg: ni.NonidealConfig = ni.NonidealConfig.all(),
-                            ) -> DetectorEnsemble:
+                            device=None) -> DetectorEnsemble:
     """Sample a chip population of every group crossbar in the detector.
 
     Pass `chip_ids` to sample an arbitrary slice of the logical ensemble
     (how the streaming sweep bounds memory); the key chain per (chip, layer,
-    group) matches the single-chip eval path exactly.
+    group) matches the single-chip eval path exactly.  `device` selects the
+    `repro.device` backend all layer planes are drawn from (None: analytic).
     """
     dcfg = det.cfg
     if chip_ids is None:
@@ -97,7 +98,8 @@ def build_detector_ensemble(key: jax.Array, det, params, n_chips: int = 0, *,
                                                           cin, ch)):
                 keys = detector_layer_keys(key, chip_ids, s * 10 + b, g)
                 groups.append(sample_ensemble_with_keys(
-                    keys, mapped, chip_ids=chip_ids, cfg=cfg, spec=det.spec))
+                    keys, mapped, chip_ids=chip_ids, cfg=cfg, spec=det.spec,
+                    device=device))
             layers[name] = tuple(groups)
     return DetectorEnsemble(layers=layers, chip_ids=chip_ids)
 
@@ -105,7 +107,7 @@ def build_detector_ensemble(key: jax.Array, det, params, n_chips: int = 0, *,
 def build_train_ensemble(key: jax.Array, det, params, n_chips: int, *,
                          chip_ids: Optional[jax.Array] = None,
                          cfg: ni.NonidealConfig = ni.NonidealConfig.all(),
-                         ) -> DetectorEnsemble:
+                         device=None) -> DetectorEnsemble:
     """Train-time chip population: per-layer DEVIATION planes, no eval-only
     extras (per-die bias calibration, sensing periphery state).
 
@@ -121,21 +123,22 @@ def build_train_ensemble(key: jax.Array, det, params, n_chips: int, *,
     """
     from repro.mc.ensemble import deviation_planes
     ens = build_detector_ensemble(key, det, params, n_chips,
-                                  chip_ids=chip_ids, cfg=cfg)
+                                  chip_ids=chip_ids, cfg=cfg, device=device)
     return DetectorEnsemble(
-        layers={name: tuple(deviation_planes(g, det.spec) for g in groups)
+        layers={name: tuple(deviation_planes(g, det.spec, device)
+                            for g in groups)
                 for name, groups in ens.layers.items()},
         chip_ids=ens.chip_ids)
 
 
 @functools.partial(jax.jit, static_argnames=("det_cfg", "spec", "cfg_ni",
                                              "sa_extra", "use_kernel",
-                                             "kernel_impl"))
+                                             "kernel_impl", "device"))
 def _ensemble_forward(params, images, ens: DetectorEnsemble, *, det_cfg,
                       spec: MacroSpec, cfg_ni: ni.NonidealConfig,
                       sa_extra: float,
                       use_kernel: Optional[bool] = None,
-                      kernel_impl: str = "pallas") -> jax.Array:
+                      kernel_impl: str = "pallas", device=None) -> jax.Array:
     """Module-level jitted ensemble forward: the compile cache is keyed on
     the (hashable) detector config, so repeated `run_mc_detector` calls —
     chunk streams, ablation columns, benchmark reruns — reuse one program
@@ -144,7 +147,8 @@ def _ensemble_forward(params, images, ens: DetectorEnsemble, *, det_cfg,
     det = IRCDetector(det_cfg, spec)
     return det.apply(params, images, mode="ensemble", ensemble=ens,
                      cfg_ni=cfg_ni, sa_extra=sa_extra,
-                     use_kernel=use_kernel, kernel_impl=kernel_impl)
+                     use_kernel=use_kernel, kernel_impl=kernel_impl,
+                     device=device)
 
 
 def detector_planes(det, params):
@@ -180,7 +184,7 @@ def _sample_and_forward(params, images, key, chip_ids, planes, *, det_cfg,
                         spec: MacroSpec, cfg_ni: ni.NonidealConfig,
                         sa_extra: float, meta,
                         use_kernel: Optional[bool] = None,
-                        kernel_impl: str = "pallas") -> jax.Array:
+                        kernel_impl: str = "pallas", device=None) -> jax.Array:
     """Shared trace body of `_sampled_chunk_forward` and
     `committee_wave_forward`: rebuild each group's `MappedLayer` from the
     hoisted planes/meta, sample the chunk's `DetectorEnsemble` in-trace, and
@@ -198,22 +202,26 @@ def _sample_and_forward(params, images, key, chip_ids, planes, *, det_cfg,
                                  scheme=scheme, fan_in=fan_in)
             keys = detector_layer_keys(key, chip_ids, layer_id, g)
             groups.append(sample_ensemble_with_keys(
-                keys, mapped, chip_ids=chip_ids, cfg=cfg_ni, spec=spec))
+                keys, mapped, chip_ids=chip_ids, cfg=cfg_ni, spec=spec,
+                device=device))
         layers[name] = tuple(groups)
     ens = DetectorEnsemble(layers=layers, chip_ids=chip_ids)
     return det.apply(params, images, mode="ensemble", ensemble=ens,
                      cfg_ni=cfg_ni, sa_extra=sa_extra,
-                     use_kernel=use_kernel, kernel_impl=kernel_impl)
+                     use_kernel=use_kernel, kernel_impl=kernel_impl,
+                     device=device)
 
 
 @functools.partial(jax.jit, static_argnames=("det_cfg", "spec", "cfg_ni",
                                              "sa_extra", "meta",
-                                             "use_kernel", "kernel_impl"))
+                                             "use_kernel", "kernel_impl",
+                                             "device"))
 def _sampled_chunk_forward(params, images, key, chip_ids, planes, *, det_cfg,
                            spec: MacroSpec, cfg_ni: ni.NonidealConfig,
                            sa_extra: float, meta,
                            use_kernel: Optional[bool] = None,
-                           kernel_impl: str = "pallas") -> jax.Array:
+                           kernel_impl: str = "pallas",
+                           device=None) -> jax.Array:
     """Fused chunk program for the pipelined sweep: sample the chunk's
     `DetectorEnsemble` IN-TRACE (same `detector_layer_keys` stream and
     `sample_ensemble_with_keys` ops as the eager builder — the threefry
@@ -226,17 +234,20 @@ def _sampled_chunk_forward(params, images, key, chip_ids, planes, *, det_cfg,
     return _sample_and_forward(params, images, key, chip_ids, planes,
                                det_cfg=det_cfg, spec=spec, cfg_ni=cfg_ni,
                                sa_extra=sa_extra, meta=meta,
-                               use_kernel=use_kernel, kernel_impl=kernel_impl)
+                               use_kernel=use_kernel, kernel_impl=kernel_impl,
+                               device=device)
 
 
 @functools.partial(jax.jit, static_argnames=("det_cfg", "spec", "cfg_ni",
                                              "sa_extra", "meta",
-                                             "use_kernel", "kernel_impl"))
+                                             "use_kernel", "kernel_impl",
+                                             "device"))
 def committee_wave_forward(params, images, request_keys, chip_ids, planes, *,
                            det_cfg, spec: MacroSpec,
                            cfg_ni: ni.NonidealConfig, sa_extra: float, meta,
                            use_kernel: Optional[bool] = None,
-                           kernel_impl: str = "pallas") -> jax.Array:
+                           kernel_impl: str = "pallas",
+                           device=None) -> jax.Array:
     """One serving wave: every request lane gets its OWN chip committee.
 
     `images` is [slots, H, W, 3] and `request_keys` is [slots] stacked PRNG
@@ -258,7 +269,8 @@ def committee_wave_forward(params, images, request_keys, chip_ids, planes, *,
         out = _sample_and_forward(
             params, images[i:i + 1], request_keys[i], chip_ids, planes,
             det_cfg=det_cfg, spec=spec, cfg_ni=cfg_ni, sa_extra=sa_extra,
-            meta=meta, use_kernel=use_kernel, kernel_impl=kernel_impl)
+            meta=meta, use_kernel=use_kernel, kernel_impl=kernel_impl,
+            device=device)
         lanes.append(out[:, 0])                 # [chips, gh, gw, ho]
     return jnp.stack(lanes)
 
@@ -314,7 +326,9 @@ def run_mc_detector(key: jax.Array, det, params, images: jax.Array,
     host_timer = PhaseTimer("mc_detector_host", unit="chips")
     obs.log_event("mc_start", phase="mc_detector", n_chips=mc.n_chips,
                   chunk_size=mc.chunk_size, stderr_target=stderr_target,
-                  pipeline=pipeline)
+                  pipeline=pipeline,
+                  device_model=(mc.device.name if mc.device is not None
+                                else "analytic"))
 
     chunk_ids = [jnp.arange(lo, min(lo + mc.chunk_size, mc.n_chips),
                             dtype=jnp.uint32)
@@ -324,10 +338,12 @@ def run_mc_detector(key: jax.Array, det, params, images: jax.Array,
         planes, meta = detector_planes(det, params)
 
         def dispatch(ids):
+            """Launch one chunk's sample+forward on device, without waiting."""
             return _sampled_chunk_forward(
                 params, images, key, ids, planes, det_cfg=det.cfg,
                 spec=det.spec, cfg_ni=mc.cfg, sa_extra=sa_extra, meta=meta,
-                use_kernel=use_kernel, kernel_impl=kernel_impl)
+                use_kernel=use_kernel, kernel_impl=kernel_impl,
+                device=mc.device)
 
         inflight = dispatch(chunk_ids[0]) if chunk_ids else None
 
@@ -344,11 +360,13 @@ def run_mc_detector(key: jax.Array, det, params, images: jax.Array,
             else:
                 with dev_timer.lap(items=n_chunk):
                     ens = build_detector_ensemble(key, det, params,
-                                                  chip_ids=ids, cfg=mc.cfg)
+                                                  chip_ids=ids, cfg=mc.cfg,
+                                                  device=mc.device)
                     preds_dev = jax.block_until_ready(_ensemble_forward(
                         params, images, ens, det_cfg=det.cfg, spec=det.spec,
                         cfg_ni=mc.cfg, sa_extra=sa_extra,
-                        use_kernel=use_kernel, kernel_impl=kernel_impl))
+                        use_kernel=use_kernel, kernel_impl=kernel_impl,
+                        device=mc.device))
             with host_timer.lap(items=n_chunk):
                 preds = np.asarray(preds_dev)
                 vals = jnp.asarray(evaluate_map_per_chip(

@@ -43,13 +43,13 @@ def _extend(x_bits: jax.Array, lead_rows: int) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("cfg", "spec", "accumulation",
                                              "partial_rows", "sa_extra_units",
-                                             "output", "per_chip_x"))
+                                             "output", "per_chip_x", "device"))
 def ensemble_apply(ens: ChipEnsemble, x_bits: jax.Array, *,
                    cfg: ni.NonidealConfig, spec: MacroSpec = DEFAULT_MACRO,
                    accumulation: str = "single_shot", partial_rows: int = 256,
                    sa_extra_units: float = 0.0,
                    output: str = "binary",
-                   per_chip_x: bool = False) -> jax.Array:
+                   per_chip_x: bool = False, device=None) -> jax.Array:
     """Evaluate every chip on a shared input batch: [chips, batch, n_out].
 
     Chip `c`'s slice equals `crossbar_forward(fold_in(key, c), x, mapped, ...)`
@@ -65,6 +65,11 @@ def ensemble_apply(ens: ChipEnsemble, x_bits: jax.Array, *,
     IRC layer into the next.  Counts then depend on each chip's own inputs,
     so nothing hoists, but the placement planes still pass through as ONE
     shared [rows, n_out] array.
+
+    `device` is the `repro.device` backend for the PERIPHERY terms (SA
+    offset sigma, IR drop); it must match the backend the ensemble's planes
+    were sampled with.  Device models are frozen hashable dataclasses, so
+    passing one as a static argument reuses the jit cache across calls.
     """
     x_ext = _extend(x_bits, ens.lead_rows)
     if per_chip_x:
@@ -75,14 +80,14 @@ def ensemble_apply(ens: ChipEnsemble, x_bits: jax.Array, *,
         fwd = lambda k, xc, ep, en, gp, gn: crossbar_apply(
             k, xc, ep, en, gp, gn, cfg=cfg, spec=spec,
             accumulation=accumulation, partial_rows=partial_rows,
-            sa_extra_units=sa_extra_units, output=output)
+            sa_extra_units=sa_extra_units, output=output, device=device)
         return jax.vmap(fwd, in_axes=(0, 0, 0, 0, in_g, in_g))(
             ens.sa_keys, x_ext, ens.ep, ens.en, ens.gp, ens.gn)
     if ens.planes_per_chip():
         fwd = lambda k, ep, en, gp, gn: crossbar_apply(
             k, x_ext, ep, en, gp, gn, cfg=cfg, spec=spec,
             accumulation=accumulation, partial_rows=partial_rows,
-            sa_extra_units=sa_extra_units, output=output)
+            sa_extra_units=sa_extra_units, output=output, device=device)
         return jax.vmap(fwd)(ens.sa_keys, ens.ep, ens.en, ens.gp, ens.gn)
 
     blk = spec.ir_block
@@ -92,30 +97,32 @@ def ensemble_apply(ens: ChipEnsemble, x_bits: jax.Array, *,
     def fwd(k_sa, ep, en):
         """One chip's forward against the SHARED placement-plane counts."""
         i_pos, p_pos = _accumulate(_block_reduce(x_ext, ep, blk), counts_p,
-                                   cfg, spec, accumulation, partial_rows)
+                                   cfg, spec, accumulation, partial_rows,
+                                   device)
         i_neg, p_neg = _accumulate(_block_reduce(x_ext, en, blk), counts_n,
-                                   cfg, spec, accumulation, partial_rows)
+                                   cfg, spec, accumulation, partial_rows,
+                                   device)
         if output == "diff":
             return i_pos - i_neg
         if output == "sensed_diff":
             return ni.sensed_diff(k_sa, i_pos, i_neg, p_pos + p_neg, cfg,
-                                  spec, sa_extra_units)
+                                  spec, sa_extra_units, device)
         return ni.resolve_sa(k_sa, i_pos, i_neg, p_pos + p_neg, cfg, spec,
-                             sa_extra_units)
+                             sa_extra_units, device)
 
     return jax.vmap(fwd)(ens.sa_keys, ens.ep, ens.en)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "spec", "sa_extra_units",
                                              "output", "per_chip_x", "impl",
-                                             "bm", "bn", "bk"))
+                                             "bm", "bn", "bk", "device"))
 def ensemble_apply_kernel(ens: ChipEnsemble, x_bits: jax.Array, *,
                           cfg: ni.NonidealConfig,
                           spec: MacroSpec = DEFAULT_MACRO,
                           sa_extra_units: float = 0.0, output: str = "binary",
                           per_chip_x: bool = False, impl: str = "pallas",
-                          bm: int = 8, bn: int = 128, bk: int = 256
-                          ) -> jax.Array:
+                          bm: int = 8, bn: int = 128, bk: int = 256,
+                          device=None) -> jax.Array:
     """Chip-batched Pallas path: ONE kernel launch services all chips.
 
     Single-shot accumulation only (the kernel's fused epilogue).  The
@@ -134,6 +141,14 @@ def ensemble_apply_kernel(ens: ChipEnsemble, x_bits: jax.Array, *,
     """
     from repro.kernels.ops import irc_mvm_chips
     from repro.kernels.ref import IrcEpilogueParams, irc_mvm_chips_ref
+    if device is not None and not device.analytic_periphery:
+        # the Pallas epilogue bakes the ANALYTIC periphery closed forms
+        # (g(p) polynomial, linear IR drop) into scalar params; a backend
+        # with its own periphery model cannot be expressed in them
+        raise NotImplementedError(
+            f"device model {device.name!r} has a non-analytic periphery; "
+            "the chip-batched kernel supports analytic-periphery backends "
+            "only — use the jnp engine (backend='jnp')")
     if per_chip_x:
         assert x_bits.ndim == 3 and x_bits.shape[0] == ens.n_chips, (
             f"per_chip_x needs [chips={ens.n_chips}, batch, fan_in] inputs, "
@@ -165,12 +180,12 @@ def ensemble_apply_kernel(ens: ChipEnsemble, x_bits: jax.Array, *,
 @functools.partial(jax.jit, static_argnames=("scheme", "fan_in", "cfg",
                                              "spec", "accumulation",
                                              "partial_rows", "sa_extra_units",
-                                             "backend"),
+                                             "backend", "device"),
                    donate_argnums=(0, 1, 2))
 def _ensemble_apply_donated(ep, en, sa_keys, chip_ids, gp, gn, bias_units,
                             x_bits, *, scheme, fan_in, cfg, spec,
                             accumulation, partial_rows, sa_extra_units,
-                            backend):
+                            backend, device=None):
     """Per-chunk forward with the chunk's THROWAWAY sampled state donated.
 
     `run_mc` samples fresh ep/en/sa_keys every chunk and never touches them
@@ -185,11 +200,12 @@ def _ensemble_apply_donated(ep, en, sa_keys, chip_ids, gp, gn, bias_units,
                        scheme=scheme, fan_in=fan_in)
     if backend == "kernel":
         return ensemble_apply_kernel(ens, x_bits, cfg=cfg, spec=spec,
-                                     sa_extra_units=sa_extra_units)
+                                     sa_extra_units=sa_extra_units,
+                                     device=device)
     return ensemble_apply(ens, x_bits, cfg=cfg, spec=spec,
                           accumulation=accumulation,
                           partial_rows=partial_rows,
-                          sa_extra_units=sa_extra_units)
+                          sa_extra_units=sa_extra_units, device=device)
 
 
 # ------------------------------------------------------------------ metrics
@@ -213,10 +229,11 @@ def ones_fraction_metric() -> MetricFn:
 
 @functools.partial(jax.jit, static_argnames=("scheme", "fan_in", "cfg",
                                              "spec", "accumulation",
-                                             "partial_rows", "sa_extra_units"))
+                                             "partial_rows", "sa_extra_units",
+                                             "device"))
 def _fused_chunk_metrics(key, ids, x_bits, gp, gn, ref_bits, *, scheme,
                          fan_in, cfg, spec, accumulation, partial_rows,
-                         sa_extra_units):
+                         sa_extra_units, device=None):
     """sample -> forward -> per-chip metrics as one cached jitted program
     (module-level so repeated `run_mc` calls reuse the compilation; eager
     per-chunk sampling and op-by-op metric reductions otherwise cost as much
@@ -225,11 +242,12 @@ def _fused_chunk_metrics(key, ids, x_bits, gp, gn, ref_bits, *, scheme,
     mapped = MappedLayer(g_pos=gp, g_neg=gn,
                          bias_rows=gp.shape[0] - fan_in, scheme=scheme,
                          fan_in=fan_in)
-    ens = sample_ensemble(key, mapped, chip_ids=ids, cfg=cfg, spec=spec)
+    ens = sample_ensemble(key, mapped, chip_ids=ids, cfg=cfg, spec=spec,
+                          device=device)
     out = ensemble_apply(ens, x_bits, cfg=cfg, spec=spec,
                          accumulation=accumulation,
                          partial_rows=partial_rows,
-                         sa_extra_units=sa_extra_units)
+                         sa_extra_units=sa_extra_units, device=device)
     metrics = {"ones_fraction": ones_fraction_metric()(out)}
     if ref_bits is not None:
         metrics["bit_agreement"] = bit_agreement_metric(ref_bits)(out)
@@ -240,7 +258,13 @@ def _fused_chunk_metrics(key, ids, x_bits, gp, gn, ref_bits, *, scheme,
 
 @dataclasses.dataclass(frozen=True)
 class McConfig:
-    """One ensemble sweep: population size, chunking, effect toggles."""
+    """One ensemble sweep: population size, chunking, effect toggles.
+
+    `device` is the `repro.device` backend chips are sampled from and the
+    periphery statistics come from (None: analytic — the paper's closed
+    forms, bit-identical to the pre-seam engine); build named/aged backends
+    with `repro.device.get_device_model`.
+    """
     n_chips: int = 64
     chunk_size: int = 32
     cfg: ni.NonidealConfig = ni.NonidealConfig.all()
@@ -250,6 +274,7 @@ class McConfig:
     backend: str = "jnp"                 # "jnp" | "kernel"
     calibrate: bool = False              # per-chip bias calibration
     quantiles: Tuple[float, ...] = DEFAULT_QUANTILES
+    device: Optional[object] = None      # repro.device.DeviceModel
 
 
 @dataclasses.dataclass
@@ -353,7 +378,9 @@ def run_mc(key: jax.Array, mapped, x_bits: jax.Array, *,
     timer = PhaseTimer("mc_chunks", unit="chips")
     obs.log_event("mc_start", n_chips=mc.n_chips, chunk_size=mc.chunk_size,
                   backend=mc.backend, calibrate=mc.calibrate,
-                  fused=use_fused, stderr_target=stderr_target)
+                  fused=use_fused, stderr_target=stderr_target,
+                  device_model=(mc.device.name if mc.device is not None
+                                else "analytic"))
 
     n_done = 0
     for chunk_i, lo in enumerate(range(0, mc.n_chips, mc.chunk_size)):
@@ -366,14 +393,14 @@ def run_mc(key: jax.Array, mapped, x_bits: jax.Array, *,
                     scheme=mapped.scheme, fan_in=mapped.fan_in, cfg=mc.cfg,
                     spec=spec, accumulation=mc.accumulation,
                     partial_rows=mc.partial_rows,
-                    sa_extra_units=mc.sa_extra_units)))
+                    sa_extra_units=mc.sa_extra_units, device=mc.device)))
             else:
                 ens = sample_ensemble(key, mapped, chip_ids=ids, cfg=mc.cfg,
-                                      spec=spec)
+                                      spec=spec, device=mc.device)
                 if mc.calibrate:
                     ens = calibrate_ensemble_bias(
                         ens, x_bits if x_calib_bits is None else x_calib_bits,
-                        spec)
+                        spec, device=mc.device)
                     bias_chunks.append(np.asarray(ens.bias_units))
                 if mesh is not None:
                     ens = shard_ensemble(ens, mesh)
@@ -385,7 +412,8 @@ def run_mc(key: jax.Array, mapped, x_bits: jax.Array, *,
                     fan_in=ens.fan_in, cfg=mc.cfg, spec=spec,
                     accumulation=mc.accumulation,
                     partial_rows=mc.partial_rows,
-                    sa_extra_units=mc.sa_extra_units, backend=mc.backend)
+                    sa_extra_units=mc.sa_extra_units, backend=mc.backend,
+                    device=mc.device)
                 out = jax.block_until_ready(out)
                 chunk_vals = {name: fn(out) for name, fn in fns.items()}
                 if host_fns:

@@ -91,23 +91,28 @@ def chip_keys(key: jax.Array, chip_ids: jax.Array) -> jax.Array:
 def sample_ensemble(key: jax.Array, mapped: MappedLayer, n_chips: int = 0,
                     *, chip_ids: Optional[jax.Array] = None,
                     cfg: ni.NonidealConfig = ni.NonidealConfig.all(),
-                    spec: MacroSpec = DEFAULT_MACRO) -> ChipEnsemble:
+                    spec: MacroSpec = DEFAULT_MACRO,
+                    device=None) -> ChipEnsemble:
     """Sample `n_chips` chip instances of one mapped layer.
 
     Pass `chip_ids` instead of `n_chips` to sample an arbitrary slice of the
     logical ensemble (how the streaming engine bounds memory: chunked ids,
     one `fold_in` stream, identical chips regardless of chunking).
+    `device` selects the `repro.device` backend the chip state is drawn from
+    (None: analytic, bit-identical to the legacy closed forms).
     """
     if chip_ids is None:
         chip_ids = jnp.arange(n_chips, dtype=jnp.uint32)
     return sample_ensemble_with_keys(chip_keys(key, chip_ids), mapped,
-                                     chip_ids=chip_ids, cfg=cfg, spec=spec)
+                                     chip_ids=chip_ids, cfg=cfg, spec=spec,
+                                     device=device)
 
 
 def sample_ensemble_with_keys(keys: jax.Array, mapped: MappedLayer, *,
                               chip_ids: Optional[jax.Array] = None,
                               cfg: ni.NonidealConfig = ni.NonidealConfig.all(),
-                              spec: MacroSpec = DEFAULT_MACRO) -> ChipEnsemble:
+                              spec: MacroSpec = DEFAULT_MACRO,
+                              device=None) -> ChipEnsemble:
     """Sample chips from EXPLICIT per-chip keys [chips] instead of the
     default `fold_in(key, c)` stream.
 
@@ -123,7 +128,7 @@ def sample_ensemble_with_keys(keys: jax.Array, mapped: MappedLayer, *,
         chip_ids = jnp.arange(keys.shape[0], dtype=jnp.uint32)
     sample = jax.vmap(
         lambda k: sample_chip_planes(k, mapped.g_pos, mapped.g_neg,
-                                     mapped.scheme, cfg, spec))
+                                     mapped.scheme, cfg, spec, device))
     ep, en, sa_keys = sample(keys)
     return ChipEnsemble(ep=ep, en=en, gp=mapped.g_pos, gn=mapped.g_neg,
                         sa_keys=sa_keys, chip_ids=chip_ids, bias_units=None,
@@ -151,8 +156,8 @@ def shard_ensemble(ens: ChipEnsemble, mesh) -> ChipEnsemble:
         bias_units=put(ens.bias_units))
 
 
-def deviation_planes(ens: ChipEnsemble, spec: MacroSpec = DEFAULT_MACRO
-                     ) -> ChipEnsemble:
+def deviation_planes(ens: ChipEnsemble, spec: MacroSpec = DEFAULT_MACRO,
+                     device=None) -> ChipEnsemble:
     """The ensemble with ep/en replaced by (effective - nominal) conductance
     DELTAS, for the train-time surrogate.
 
@@ -171,7 +176,9 @@ def deviation_planes(ens: ChipEnsemble, spec: MacroSpec = DEFAULT_MACRO
     """
     assert ens.bias_units is None, (
         "deviation_planes needs an uncalibrated ensemble (train-time path)")
-    leak = float(spec.hrs_leak)
+    # the nominal planes must use the SAME leak floor the chips were sampled
+    # with, so deltas are zero when variation is off under any backend
+    leak = ni._device_or_analytic(device).hrs_leak_units(spec)
     gp = ens.gp if ens.planes_per_chip() else ens.gp[None]
     gn = ens.gn if ens.planes_per_chip() else ens.gn[None]
     ep0 = gp + (1.0 - gp) * leak
@@ -181,7 +188,8 @@ def deviation_planes(ens: ChipEnsemble, spec: MacroSpec = DEFAULT_MACRO
 
 # ------------------------------------------------------------- per-chip bias
 
-def _chip_current_stats(x_ext: jax.Array, ep, en, gp, gn, spec: MacroSpec
+def _chip_current_stats(x_ext: jax.Array, ep, en, gp, gn, spec: MacroSpec,
+                        device=None
                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """(i_pos, i_neg, p_pair) of one chip on a calibration batch, with the
     physical effects the SA actually sees (variation pre-applied in ep/en,
@@ -191,10 +199,10 @@ def _chip_current_stats(x_ext: jax.Array, ep, en, gp, gn, spec: MacroSpec
     blk = spec.ir_block
     i_pos, p_pos = _accumulate(_block_reduce(x_ext, ep, blk),
                                _block_reduce(x_ext, gp, blk),
-                               cfg, spec, "single_shot", 256)
+                               cfg, spec, "single_shot", 256, device)
     i_neg, p_neg = _accumulate(_block_reduce(x_ext, en, blk),
                                _block_reduce(x_ext, gn, blk),
-                               cfg, spec, "single_shot", 256)
+                               cfg, spec, "single_shot", 256, device)
     return i_pos.ravel(), i_neg.ravel(), (p_pos + p_neg).ravel()
 
 
@@ -202,7 +210,7 @@ def calibrate_ensemble_bias(ens: ChipEnsemble, x_calib_bits: jax.Array,
                             spec: MacroSpec = DEFAULT_MACRO,
                             candidates: Sequence[int] = (0, 4, 8, 12, 16,
                                                          20, 24, 28, 32),
-                            ) -> ChipEnsemble:
+                            device=None) -> ChipEnsemble:
     """Per-die extra-bias calibration (Sec. IV-B.4 deployment flow).
 
     The ensemble must be sampled from a mapping whose `lead_rows` equal the
@@ -220,7 +228,8 @@ def calibrate_ensemble_bias(ens: ChipEnsemble, x_calib_bits: jax.Array,
         [jnp.zeros(x_calib_bits.shape[:-1] + (lead,), jnp.float32),
          x_calib_bits.astype(jnp.float32)], axis=-1)
     stats = jax.jit(jax.vmap(
-        lambda ep, en, gp, gn: _chip_current_stats(x_ext, ep, en, gp, gn, spec),
+        lambda ep, en, gp, gn: _chip_current_stats(x_ext, ep, en, gp, gn, spec,
+                                                   device),
         in_axes=(0, 0, None if ens.gp.ndim == 2 else 0,
                  None if ens.gn.ndim == 2 else 0)))(
         ens.ep, ens.en, ens.gp, ens.gn)
@@ -235,7 +244,7 @@ def calibrate_ensemble_bias(ens: ChipEnsemble, x_calib_bits: jax.Array,
     on = ((row[None, :] < bias[:, None]) | (row[None, :] >= lead)
           ).astype(jnp.float32)
     m = on[:, :, None]
-    leak = float(spec.hrs_leak)
+    leak = ni._device_or_analytic(device).hrs_leak_units(spec)
     gp = ens.gp if ens.gp.ndim == 3 else ens.gp[None]
     gn = ens.gn if ens.gn.ndim == 3 else ens.gn[None]
     return dataclasses.replace(

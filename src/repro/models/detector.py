@@ -186,7 +186,7 @@ class IRCDetector:
 
     def _gconv(self, blk: PyTree, x: jax.Array, cin: int, cout: int, *,
                mode: str, key: jax.Array, cfg_ni: ni.NonidealConfig,
-               sa_extra: float = 0.0) -> jax.Array:
+               sa_extra: float = 0.0, device=None) -> jax.Array:
         """Binary group conv + (baseline) BN + binary activation."""
         cfg = self.cfg
         # inputs are {0,1} activations from the previous layer
@@ -212,7 +212,8 @@ class IRCDetector:
                     pre = pre + std * jax.random.normal(key, pre.shape)
             return binary_activation(pre)
         return self._gconv_structural(blk, x, cin, cout, key=key,
-                                      cfg_ni=cfg_ni, sa_extra=sa_extra)
+                                      cfg_ni=cfg_ni, sa_extra=sa_extra,
+                                      device=device)
 
     def group_mappings(self, blk: PyTree, cin: int, cout: int) -> List:
         """Per-group `MappedLayer`s of one block (static per deployment).
@@ -264,7 +265,7 @@ class IRCDetector:
     def _gconv_structural(self, blk: PyTree, x: jax.Array, cin: int,
                           cout: int, *, key: jax.Array,
                           cfg_ni: ni.NonidealConfig,
-                          sa_extra: float = 0.0) -> jax.Array:
+                          sa_extra: float = 0.0, device=None) -> jax.Array:
         """Full crossbar sim: im2col per group -> mapped planes -> SA bits."""
         cfg, spec = self.cfg, self.spec
         n_groups = cout // cfg.group
@@ -277,7 +278,7 @@ class IRCDetector:
                                    mapped, cfg=cfg_ni, spec=spec,
                                    accumulation=cfg.accumulation,
                                    partial_rows=cfg.partial_rows,
-                                   sa_extra_units=sa_extra)
+                                   sa_extra_units=sa_extra, device=device)
             outs.append(out.reshape(B, H, W, cfg.group))
         return jnp.concatenate(outs, axis=-1)
 
@@ -286,7 +287,7 @@ class IRCDetector:
                         sa_extra: float = 0.0,
                         output: str = "binary",
                         use_kernel: Optional[bool] = None,
-                        kernel_impl: str = "pallas") -> jax.Array:
+                        kernel_impl: str = "pallas", device=None) -> jax.Array:
         """Ensemble-mode group conv: one vmapped `ensemble_apply` per group
         services every chip of a `DetectorEnsemble` layer.
 
@@ -328,7 +329,10 @@ class IRCDetector:
                 else (-1, 9 * cfg.group))
             route = use_kernel
             if route is None:
+                # the kernel's fused epilogue bakes the ANALYTIC periphery;
+                # auto-routing never picks it for a backend with its own
                 route = (cfg.accumulation == "single_shot"
+                         and (device is None or device.analytic_periphery)
                          and autotune.kernel_wins(ens.n_chips,
                                                   x_bits.shape[-2],
                                                   ens.n_out, ens.rows))
@@ -342,14 +346,15 @@ class IRCDetector:
                                             output=output,
                                             per_chip_x=per_chip,
                                             impl=kernel_impl,
-                                            bm=bm, bn=bn, bk=bk)
+                                            bm=bm, bn=bn, bk=bk,
+                                            device=device)
             else:
                 out = ensemble_apply(ens, x_bits, cfg=cfg_ni, spec=self.spec,
                                      accumulation=cfg.accumulation,
                                      partial_rows=cfg.partial_rows,
                                      sa_extra_units=sa_extra,
                                      output=output,
-                                     per_chip_x=per_chip)
+                                     per_chip_x=per_chip, device=device)
             outs.append(out.reshape(out.shape[0], B, H, W, cfg.group))
         return jnp.concatenate(outs, axis=-1)
 
@@ -357,7 +362,8 @@ class IRCDetector:
                               cin: int, cout: int, *, key: jax.Array,
                               cfg_ni: ni.NonidealConfig,
                               use_kernel: Optional[bool] = None,
-                              kernel_impl: str = "pallas") -> jax.Array:
+                              kernel_impl: str = "pallas",
+                              device=None) -> jax.Array:
         """Ensemble-aware QAT group conv (paper Sec. V at population scale).
 
         The differentiable `mode="train"` pre-activation — chips axis folded
@@ -385,7 +391,8 @@ class IRCDetector:
                                        cfg_ni=ni.NonidealConfig.none(),
                                        output="diff",
                                        use_kernel=use_kernel,
-                                       kernel_impl=kernel_impl)
+                                       kernel_impl=kernel_impl,
+                                       device=device)
             pre = pre + jax.lax.stop_gradient(dev)     # adds the chips axis
         if pre.ndim == 4:                              # no variation term:
             pre = jnp.broadcast_to(pre[None], (n_chips,) + pre.shape)
@@ -459,7 +466,7 @@ class IRCDetector:
               cfg_ni: ni.NonidealConfig = ni.NonidealConfig.none(),
               sa_extra: float = 0.0, ensemble=None,
               use_kernel: Optional[bool] = None,
-              kernel_impl: str = "pallas") -> jax.Array:
+              kernel_impl: str = "pallas", device=None) -> jax.Array:
         """images [B,H,W,3] in [0,1] -> head predictions [B,gh,gw,A*(5+C)].
 
         mode="train": differentiable QAT; mode="eval": single-chip structural
@@ -476,6 +483,12 @@ class IRCDetector:
         `use_kernel`/`kernel_impl` (ensemble modes only) control the
         Pallas-kernel routing of the grouped crossbar matmuls — see
         `_gconv_ensemble`; None defers to the committed autotuning table.
+
+        `device` is the `repro.device` backend for the structural/ensemble
+        periphery terms (None: analytic); an ensemble's PLANES already carry
+        the backend they were sampled with, so pass the same backend here.
+        The `mode="train"` noise surrogate stays analytic by design — it is
+        a calibrated QAT proxy, not a physics path.
         """
         cfg = self.cfg
         key = key if key is not None else jax.random.PRNGKey(0)
@@ -506,18 +519,20 @@ class IRCDetector:
                     x = self._gconv_ensemble(
                         ensemble.layers[f"s{s}b{b}"], x, cin, ch,
                         cfg_ni=cfg_ni, sa_extra=sa_extra,
-                        use_kernel=use_kernel, kernel_impl=kernel_impl)
+                        use_kernel=use_kernel, kernel_impl=kernel_impl,
+                        device=device)
                 elif mode == "train_ensemble":
                     x = self._gconv_train_ensemble(
                         params[f"s{s}b{b}"], ensemble.layers[f"s{s}b{b}"],
                         x, cin, ch, key=jax.random.fold_in(key, s * 10 + b),
                         cfg_ni=cfg_ni, use_kernel=use_kernel,
-                        kernel_impl=kernel_impl)
+                        kernel_impl=kernel_impl, device=device)
                 else:
                     x = self._gconv(params[f"s{s}b{b}"], x, cin, ch,
                                     mode=mode,
                                     key=jax.random.fold_in(key, s * 10 + b),
-                                    cfg_ni=cfg_ni, sa_extra=sa_extra)
+                                    cfg_ni=cfg_ni, sa_extra=sa_extra,
+                                    device=device)
             wd = (1,) * (x.ndim - 3) + (2, 2, 1)
             x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, wd, wd,
                                       "SAME")

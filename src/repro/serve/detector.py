@@ -118,7 +118,8 @@ class DetectorServeEngine:
                  use_kernel: Optional[bool] = None,
                  kernel_impl: str = "pallas",
                  keep_committee: bool = False,
-                 obs: Optional[RunLog] = None):
+                 obs: Optional[RunLog] = None,
+                 device=None):
         self.det = det
         self.params = params
         self.committee = committee
@@ -131,6 +132,10 @@ class DetectorServeEngine:
         self.quantiles = quantiles
         self.use_kernel = use_kernel
         self.kernel_impl = kernel_impl
+        # repro.device backend the committee chips are sampled from (None:
+        # analytic) — e.g. get_device_model("measured", t_days=30) serves
+        # the fleet as it will behave after a month in the field
+        self.device = device
         self.keep_committee = keep_committee
         # Root key only; request keys are the STABLE coordinates
         # fold_in(root, request_id) — never a split chain through engine
@@ -279,7 +284,7 @@ class DetectorServeEngine:
             self._chip_ids, self._planes, det_cfg=self.det.cfg,
             spec=self.det.spec, cfg_ni=self.cfg_ni, sa_extra=self.sa_extra,
             meta=self._meta, use_kernel=self.use_kernel,
-            kernel_impl=self.kernel_impl)
+            kernel_impl=self.kernel_impl, device=self.device)
 
     def _complete(self, wave: List[_Pending],
                   preds: np.ndarray) -> List[DetectionResponse]:

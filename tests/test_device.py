@@ -1,0 +1,252 @@
+"""The repro.device seam: analytic backend pinned bit-identical to the
+legacy sampling path, measured-table interpolation semantics, retention
+timelines (t=0 is the identity), registry names, and the kernel-path
+periphery guard."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import yolo_irc
+from repro.core import NonidealConfig, ternary_quantize, ternary_planes
+from repro.core import nonideal as ni
+from repro.core.crossbar import sample_chip_planes
+from repro.core.macro import DEFAULT_MACRO
+from repro.data.detection import SyntheticDetectionData
+from repro.device import (ANALYTIC_DEVICE, DEVICE_MODELS, DeviceModel,
+                          MeasuredDeviceModel, RetentionDrift,
+                          default_device, get_device_model)
+from repro.mc import McConfig, ensemble_apply_kernel, run_mc_detector
+from repro.mc import sample_ensemble
+from repro.models import IRCDetector
+
+
+def _mapped(fan_in=64, n_out=24, bias_rows=8, seed=0):
+    w = ternary_quantize(jax.random.normal(jax.random.PRNGKey(seed),
+                                           (fan_in, n_out)))
+    return ternary_planes(w, bias_rows=bias_rows)
+
+
+def _legacy_sample_chip_planes(key, g_pos, g_neg, scheme, cfg,
+                               spec=DEFAULT_MACRO):
+    """The pre-seam sampling math, verbatim — the contract the analytic
+    backend must reproduce bit-for-bit."""
+    k_var_p, k_var_n, k_sa = jax.random.split(key, 3)
+    ep, en = g_pos, g_neg
+    if cfg.device_variation:
+        ep = g_pos * ni.sample_variation_mask(k_var_p, g_pos.shape,
+                                              spec.sigma_lrs)
+        if scheme == "binary":
+            en = g_neg * ni.sample_variation_mask(k_var_n, (g_neg.shape[0], 1),
+                                                  spec.sigma_lrs)
+        else:
+            en = g_neg * ni.sample_variation_mask(k_var_n, g_neg.shape,
+                                                  spec.sigma_lrs)
+    if spec.hrs_leak:
+        ep = ep + (1.0 - g_pos) * spec.hrs_leak
+        en = en + (1.0 - g_neg) * spec.hrs_leak
+    return ep, en, k_sa
+
+
+class TestAnalyticBitIdentity:
+    @pytest.mark.parametrize("scheme", ["ternary", "binary"])
+    @pytest.mark.parametrize("device", [None, ANALYTIC_DEVICE])
+    def test_sample_chip_planes_matches_legacy(self, scheme, device):
+        """device=None and device=AnalyticDeviceModel() must reproduce the
+        historical sample_chip_planes draw EXACTLY — same split order, same
+        mask expressions, same leak constant — or every pinned MC result in
+        the repo silently shifts."""
+        m = _mapped(seed=3)
+        key = jax.random.PRNGKey(42)
+        ref = _legacy_sample_chip_planes(key, m.g_pos, m.g_neg, scheme,
+                                         NonidealConfig.all())
+        got = sample_chip_planes(key, m.g_pos, m.g_neg, scheme,
+                                 NonidealConfig.all(), device=device)
+        for r, g in zip(ref, got):
+            np.testing.assert_array_equal(np.asarray(r), np.asarray(g))
+
+    def test_retention_t0_is_identity(self):
+        """RetentionDrift(t_days=0) returns the base draw untouched and
+        consumes no extra randomness."""
+        m = _mapped(seed=5)
+        key = jax.random.PRNGKey(7)
+        aged0 = RetentionDrift(base=ANALYTIC_DEVICE, t_days=0.0)
+        ref = sample_chip_planes(key, m.g_pos, m.g_neg, "ternary",
+                                 NonidealConfig.all())
+        got = sample_chip_planes(key, m.g_pos, m.g_neg, "ternary",
+                                 NonidealConfig.all(), device=aged0)
+        for r, g in zip(ref, got):
+            np.testing.assert_array_equal(np.asarray(r), np.asarray(g))
+
+    def test_ensemble_sampling_matches_legacy_per_chip(self):
+        """sample_ensemble threads device= into each chip's fold_in draw:
+        chip c with the analytic backend == chip c of the legacy path."""
+        m = _mapped(seed=1)
+        key = jax.random.PRNGKey(9)
+        ens_ref = sample_ensemble(key, m, n_chips=4, cfg=NonidealConfig.all())
+        ens_dev = sample_ensemble(key, m, n_chips=4, cfg=NonidealConfig.all(),
+                                  device=ANALYTIC_DEVICE)
+        np.testing.assert_array_equal(np.asarray(ens_ref.ep),
+                                      np.asarray(ens_dev.ep))
+        np.testing.assert_array_equal(np.asarray(ens_ref.en),
+                                      np.asarray(ens_dev.en))
+        np.testing.assert_array_equal(np.asarray(ens_ref.sa_keys),
+                                      np.asarray(ens_dev.sa_keys))
+
+    @pytest.mark.slow
+    def test_run_mc_detector_per_chip_maps_identical(self):
+        """End-to-end: the whole-detector MC with device=analytic produces
+        the same per-chip mAP stream as device=None."""
+        cfg = yolo_irc.smoke("ternary")
+        det = IRCDetector(cfg)
+        params = det.init(jax.random.PRNGKey(0))
+        data = SyntheticDetectionData(img_hw=det.cfg.img_hw,
+                                      stride=det.cfg.strides,
+                                      n_classes=det.cfg.n_classes,
+                                      n_anchors=det.cfg.n_anchors)
+        b = data.batch_for_step(1000, 2)
+        params = det.calibrate_bn(params, b.images)
+        key = jax.random.PRNGKey(13)
+        mc = McConfig(n_chips=4, chunk_size=2, cfg=NonidealConfig.all())
+        res_none = run_mc_detector(key, det, params, b.images, b.boxes,
+                                   b.classes, mc=mc)
+        res_dev = run_mc_detector(
+            key, det, params, b.images, b.boxes, b.classes,
+            mc=dataclasses.replace(mc, device=ANALYTIC_DEVICE))
+        np.testing.assert_array_equal(res_none.per_chip["map50"],
+                                      res_dev.per_chip["map50"])
+
+
+class TestMeasuredModel:
+    def test_variation_factor_round_trips_grid(self):
+        """Interpolation at the tabulated quantiles returns the tabulated
+        factors (linear interpolation is exact on its grid)."""
+        dev = MeasuredDeviceModel.from_file()
+        q = jnp.asarray(dev.var_q, jnp.float32)
+        got = np.asarray(dev.variation_factor(q))
+        np.testing.assert_allclose(got, np.asarray(dev.var_factor, np.float32),
+                                   rtol=1e-6)
+
+    def test_variation_mask_shape_and_positivity(self):
+        dev = MeasuredDeviceModel.from_file()
+        mask = dev.variation_mask(jax.random.PRNGKey(0), (33, 17))
+        assert mask.shape == (33, 17) and mask.dtype == jnp.float32
+        arr = np.asarray(mask)
+        assert (arr > 0).all()
+        # clamped to the measured extremes (jnp.interp tail semantics)
+        assert arr.min() >= min(dev.var_factor) - 1e-6
+        assert arr.max() <= max(dev.var_factor) + 1e-6
+
+    def test_hrs_leak_from_iv_table(self):
+        """The leak is the measured HRS/LRS current ratio at v_read, a
+        Python float (it gates trace-time control flow)."""
+        dev = MeasuredDeviceModel.from_file()
+        leak = dev.hrs_leak_units(DEFAULT_MACRO)
+        assert isinstance(leak, float) and 0.0 < leak < 1e-3
+
+    def test_hashable_jit_static(self):
+        """Frozen-dataclass backends must hash (they ride through jit as
+        static arguments) and compare equal across loads of the same file."""
+        a = MeasuredDeviceModel.from_file()
+        b = MeasuredDeviceModel.from_file()
+        assert hash(a) == hash(b) and a == b
+
+
+class TestRetentionDrift:
+    def test_aged_mask_mean_decays(self):
+        """t > 0 lowers the mean LRS current factor (power-law retention)
+        and t=0 leaves it exactly at the base draw."""
+        key = jax.random.PRNGKey(3)
+        shape = (512, 64)
+        base = ANALYTIC_DEVICE.variation_mask(key, shape)
+        mask0 = RetentionDrift(base=ANALYTIC_DEVICE,
+                               t_days=0.0).variation_mask(key, shape)
+        np.testing.assert_array_equal(np.asarray(mask0), np.asarray(base))
+        m30 = float(jnp.mean(RetentionDrift(base=ANALYTIC_DEVICE, t_days=30.0)
+                             .variation_mask(key, shape)))
+        m365 = float(jnp.mean(RetentionDrift(base=ANALYTIC_DEVICE,
+                                             t_days=365.0)
+                              .variation_mask(key, shape)))
+        m0 = float(jnp.mean(base))
+        assert m30 < m0 and m365 < m30
+
+    def test_base_draw_shared_across_ages(self):
+        """Aging is multiplicative on the SAME programming draw — the drift
+        term uses a salted key, never the base's — so the day-0/day-N masks
+        of one chip are correlated, not independent redraws."""
+        key = jax.random.PRNGKey(11)
+        shape = (64, 16)
+        base = ANALYTIC_DEVICE.variation_mask(key, shape)
+        aged = RetentionDrift(base=ANALYTIC_DEVICE,
+                              t_days=30.0).variation_mask(key, shape)
+        ratio = np.asarray(aged / base)
+        # the ratio is the pure drift term: lognormal around the decay
+        # median, independent of the base draw's cellwise pattern
+        corr = np.corrcoef(np.log(ratio).ravel(),
+                           np.log(np.asarray(base)).ravel())[0, 1]
+        assert abs(corr) < 0.1
+        assert float(np.median(ratio)) < 1.0
+
+    def test_periphery_delegates(self):
+        aged = RetentionDrift(base=ANALYTIC_DEVICE, t_days=30.0)
+        assert aged.analytic_periphery
+        p = jnp.asarray([8.0, 64.0, 300.0])
+        np.testing.assert_array_equal(
+            np.asarray(aged.sa_offset_sigma(p)),
+            np.asarray(ANALYTIC_DEVICE.sa_offset_sigma(p)))
+
+
+class TestRegistry:
+    def test_names(self):
+        assert get_device_model("analytic") is ANALYTIC_DEVICE
+        assert isinstance(get_device_model("measured"), MeasuredDeviceModel)
+        assert set(DEVICE_MODELS) == {"analytic", "measured"}
+
+    def test_t_days_wraps_in_retention(self):
+        dev = get_device_model("measured", t_days=30)
+        assert isinstance(dev, RetentionDrift)
+        assert dev.name == "measured@t30d"
+        assert isinstance(dev.base, MeasuredDeviceModel)
+        # zero age returns the bare backend, not an identity wrapper
+        assert isinstance(get_device_model("measured", t_days=0),
+                          MeasuredDeviceModel)
+
+    def test_unknown_name_raises(self):
+        with pytest.raises(ValueError, match="unknown device model"):
+            get_device_model("spice")
+
+    def test_default_device_resolution(self):
+        assert default_device(None) is ANALYTIC_DEVICE
+        dev = get_device_model("measured")
+        assert default_device(dev) is dev
+
+
+class TestKernelPeripheryGuard:
+    def test_non_analytic_periphery_refused(self):
+        """A backend with its own periphery model cannot be expressed in the
+        kernel epilogue's scalar params — the kernel path must refuse it
+        loudly instead of computing the analytic forms anyway."""
+
+        @dataclasses.dataclass(frozen=True)
+        class CustomPeriphery(DeviceModel):
+            name = "custom-periphery"
+
+            @property
+            def analytic_periphery(self):
+                return False
+
+            def variation_mask(self, key, shape, spec=DEFAULT_MACRO):
+                return jnp.ones(shape, jnp.float32)
+
+            def hrs_leak_units(self, spec=DEFAULT_MACRO):
+                return 0.0
+
+        m = _mapped()
+        ens = sample_ensemble(jax.random.PRNGKey(0), m, n_chips=2,
+                              cfg=NonidealConfig.all())
+        x = jnp.ones((4, m.fan_in), jnp.float32)
+        with pytest.raises(NotImplementedError, match="analytic-periphery"):
+            ensemble_apply_kernel(ens, x, cfg=NonidealConfig.all(),
+                                  device=CustomPeriphery())
